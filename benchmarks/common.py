@@ -1,0 +1,48 @@
+"""Shared benchmark harness utilities.
+
+Every benchmark module exposes ``run(scale) -> list[dict]`` rows and prints
+them as ``benchmark,metric,value`` CSV.  ``scale`` shrinks corpus/request
+counts so the full suite stays CPU-friendly; the shapes of the curves (the
+paper's findings) are preserved.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List
+
+from repro.core.pipeline import PipelineConfig, RAGPipeline
+from repro.workload.corpus import CorpusConfig, SyntheticCorpus
+
+
+def emit(rows: List[Dict]) -> None:
+    for r in rows:
+        bench = r.pop("bench")
+        for k, v in r.items():
+            if isinstance(v, float):
+                print(f"{bench},{k},{v:.6g}")
+            else:
+                print(f"{bench},{k},{v}")
+    sys.stdout.flush()
+
+
+def make_corpus(n_docs: int, modality: str = "text", seed: int = 0
+                ) -> SyntheticCorpus:
+    return SyntheticCorpus(CorpusConfig(n_docs=n_docs, modality=modality,
+                                        seed=seed))
+
+
+def build_pipeline(corpus: SyntheticCorpus, **overrides) -> RAGPipeline:
+    cfg = PipelineConfig(**{
+        "embedder": "hash", "index_type": "ivf", "nlist": 16, "nprobe": 8,
+        "capacity": 1 << 15, "retrieve_k": 8, "rerank_k": 3,
+        "flat_capacity": 1024, **overrides})
+    pipe = RAGPipeline(cfg)
+    pipe.index_documents(corpus.all_documents())
+    return pipe
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0

@@ -1,0 +1,59 @@
+"""Paper Fig. 5: end-to-end query latency breakdown per pipeline stage,
+across vector-db configs and generation-model sizes."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_pipeline, emit, make_corpus
+from repro import configs
+from repro.core.generator import ModelLLM
+from repro.core.pipeline import PipelineConfig, RAGPipeline
+
+
+def run(scale: float = 1.0):
+    rows = []
+    n_docs = max(int(32 * scale), 8)
+    n_q = max(int(16 * scale), 4)
+    corpus = make_corpus(n_docs)
+    questions = [f"what is the {f.attribute} of {f.subject}?"
+                 for d in range(n_q) for f in corpus.facts[d][:1]]
+
+    # vector-db axis (paper: LanceDB/Milvus/... -> our index families)
+    for index_type, quant in [("flat", "none"), ("flat", "sq8"),
+                              ("ivf", "none"), ("ivf", "pq")]:
+        pipe = build_pipeline(corpus, index_type=index_type, quant=quant)
+        pipe.query(questions)
+        bd = pipe.breakdown()
+        total = sum(bd.get(s, 0.0) for s in
+                    ("query_embed", "retrieval", "rerank", "generation"))
+        rows.append({
+            "bench": f"query_breakdown/{index_type}-{quant}",
+            "query_embed_s": bd.get("query_embed", 0.0),
+            "retrieval_s": bd.get("retrieval", 0.0),
+            "rerank_s": bd.get("rerank", 0.0),
+            "generation_s": bd.get("generation", 0.0),
+            "total_s": total,
+        })
+
+    # generation-model axis (paper: Qwen7B/GPT20B/Qwen72B -> smoke backbones)
+    for arch in ("llama3_8b", "qwen3_moe_30b_a3b"):
+        llm = ModelLLM(configs.get_smoke(arch), max_prompt=64, max_new=4,
+                       batch_size=4)
+        pipe = RAGPipeline(PipelineConfig(capacity=1 << 14), llm=llm)
+        pipe.index_documents(corpus.all_documents())
+        pipe.query(questions[:4])
+        bd = pipe.breakdown()
+        gen = bd.get("generation", 0.0)
+        total = sum(bd.get(s, 0.0) for s in
+                    ("query_embed", "retrieval", "rerank", "generation"))
+        rows.append({
+            "bench": f"query_breakdown/model-{arch}",
+            "generation_s": gen,
+            "generation_frac": gen / total if total else 0.0,
+            "total_s": total,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

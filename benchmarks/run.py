@@ -1,0 +1,55 @@
+"""Run every benchmark (one per paper table/figure) and print CSV.
+
+``PYTHONPATH=src python -m benchmarks.run [--scale 1.0] [--only name]``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (accuracy_eval, index_schemes, indexing_breakdown,
+                        monitor_overhead, query_breakdown, resource_limits,
+                        resource_utilization, sensitivity, update_workload)
+from benchmarks.common import emit
+
+MODULES = {
+    "query_breakdown": query_breakdown,       # Fig. 5
+    "indexing_breakdown": indexing_breakdown,  # Fig. 6
+    "resource_utilization": resource_utilization,  # Fig. 7
+    "accuracy_eval": accuracy_eval,           # Fig. 8
+    "update_workload": update_workload,       # Fig. 9
+    "resource_limits": resource_limits,       # Fig. 10
+    "sensitivity": sensitivity,               # Fig. 11
+    "index_schemes": index_schemes,           # Fig. 12
+    "monitor_overhead": monitor_overhead,     # §5.8
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+
+    print("benchmark,metric,value")
+    failures = []
+    for name, mod in MODULES.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run(args.scale)
+            emit(rows)
+            print(f"{name},wall_s,{time.perf_counter() - t0:.2f}")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print("FAILED:", ",".join(failures))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,44 @@
+"""Paper Fig. 9 / §5.5: latency + accuracy under continuous updates, three
+configurations: (1) no temp flat index (stale), (2) hybrid + uniform,
+(3) hybrid + zipfian."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_pipeline, emit, make_corpus
+from repro.workload.generator import WorkloadConfig
+from repro.workload.runner import run_workload
+
+
+def run(scale: float = 1.0):
+    rows = []
+    n_docs = max(int(48 * scale), 12)
+    n_req = max(int(80 * scale), 20)
+    configs_ = [
+        ("no-flat-uniform", dict(use_hybrid=False), "uniform"),
+        ("hybrid-uniform", dict(use_hybrid=True, flat_capacity=64,
+                                rebuild_threshold=0.9), "uniform"),
+        ("hybrid-zipfian", dict(use_hybrid=True, flat_capacity=64,
+                                rebuild_threshold=0.9), "zipfian"),
+    ]
+    for name, over, dist in configs_:
+        corpus = make_corpus(n_docs, seed=1)
+        pipe = build_pipeline(corpus, **over)
+        res = run_workload(pipe, corpus, WorkloadConfig(
+            query_frac=0.5, update_frac=0.5, n_requests=n_req,
+            distribution=dist, seed=2), query_batch=4)
+        lat = res.latencies.get("query", [0.0])
+        rows.append({
+            "bench": f"update_workload/{name}",
+            "qps": res.qps,
+            "query_latency_mean_s": float(np.mean(lat)),
+            "query_latency_p95_s": float(np.percentile(lat, 95)),
+            "rebuilds": pipe.db.stats()["rebuilds"],
+            "context_recall": res.quality["context_recall"],
+            "exact": res.quality["exact"],
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

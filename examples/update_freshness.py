@@ -1,0 +1,45 @@
+"""Paper §5.5 scenario: continuous updates vs index freshness.
+
+Runs the same 50/50 query/update workload against three configurations and
+prints the latency/accuracy trade-off the paper's Fig. 9 shows:
+  1. no temp flat index  -> stable latency, stale answers;
+  2. hybrid + uniform    -> fresh answers, latency sawtooth (rebuilds);
+  3. hybrid + zipfian    -> fresh answers, gentler growth (fewer uniques).
+
+    PYTHONPATH=src python examples/update_freshness.py
+"""
+import numpy as np
+
+from repro.core.pipeline import PipelineConfig, RAGPipeline
+from repro.workload.corpus import CorpusConfig, SyntheticCorpus
+from repro.workload.generator import WorkloadConfig
+from repro.workload.runner import run_workload
+
+
+def run_config(name, use_hybrid, distribution):
+    corpus = SyntheticCorpus(CorpusConfig(n_docs=64, seed=1))
+    pipe = RAGPipeline(PipelineConfig(
+        index_type="ivf", nlist=16, nprobe=8, capacity=1 << 15,
+        use_hybrid=use_hybrid, flat_capacity=96, rebuild_threshold=0.9))
+    pipe.index_documents(corpus.all_documents())
+    res = run_workload(pipe, corpus, WorkloadConfig(
+        query_frac=0.5, update_frac=0.5, n_requests=120,
+        distribution=distribution, seed=2), query_batch=4)
+    lat = res.latencies.get("query", [0.0])
+    print(f"{name:18s} qps={res.qps:6.1f} "
+          f"query p50={np.median(lat) * 1e3:6.1f}ms "
+          f"p95={np.percentile(lat, 95) * 1e3:6.1f}ms "
+          f"rebuilds={pipe.db.stats()['rebuilds']:.0f} "
+          f"recall={res.quality['context_recall']:.2f} "
+          f"exact={res.quality['exact']:.2f}")
+
+
+def main():
+    print("config             throughput  latency                rebuilds  quality")
+    run_config("no-flat uniform", False, "uniform")
+    run_config("hybrid uniform", True, "uniform")
+    run_config("hybrid zipfian", True, "zipfian")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""RAGPerf core: the paper's configurable RAG pipeline (embedding, indexing,
+retrieval, reranking, generation) behind the Fig. 4 interfaces."""
+from repro.core.interfaces import (  # noqa: F401
+    BaseEmbedder, BaseLLM, BaseReranker, Chunk, DBInstance, SearchResult,
+    StageTrace)
+from repro.core.pipeline import PipelineConfig, RAGPipeline  # noqa: F401
+from repro.core.vectordb import DBConfig, JaxVectorDB, make_db  # noqa: F401

@@ -1,0 +1,126 @@
+"""Embedding stage (paper §3.3.1).
+
+Two JAX-native embedders behind ``BaseEmbedder``:
+
+``TransformerEmbedder`` — bidirectional encoder (our transformer layers run
+    non-causally) with masked mean pooling + L2 norm.  This is the
+    performance-realistic path: its FLOP/byte profile matches a
+    SentenceTransformer-class model, and it TP/DP-shards like any model in
+    the zoo.  Weights are random (no pretrained weights offline), so it is
+    used for *performance* characterization.
+
+``HashEmbedder`` — deterministic bag-of-tokens + fixed random projection
+    (SimHash-style).  Documents sharing vocabulary land close in cosine
+    space, so retrieval *quality* metrics (context recall etc.) are
+    meaningful without any training.  Used for accuracy benchmarks.
+
+Embedding dimension is a config knob in both (paper Fig. 11 sweeps it).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interfaces import BaseEmbedder
+from repro.core.tokenizer import HashTokenizer
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def encoder_config(d_model: int = 256, n_layers: int = 4, n_heads: int = 4,
+                   dim: int = 384, vocab: int = 32768) -> ModelConfig:
+    return ModelConfig(
+        name=f"embedder-{dim}", family="dense", n_layers=n_layers,
+        d_model=d_model, n_heads=n_heads, n_kv_heads=n_heads,
+        d_ff=4 * d_model, vocab_size=vocab, activation="gelu",
+        rope_type="rope", rope_theta=10000.0, remat="none")
+
+
+class HashEmbedder(BaseEmbedder):
+    """Deterministic token-bag embedding: E[token] rows from a fixed random
+    Gaussian, mean-pooled, L2-normalized.  Zero model FLOPs; pure lookup."""
+
+    def __init__(self, dim: int = 384, vocab_size: int = 32768, seed: int = 0):
+        self.dim = dim
+        self.tok = HashTokenizer(vocab_size)
+        key = jax.random.PRNGKey(seed)
+        # fixed projection table, host-side
+        self.table = np.asarray(
+            jax.random.normal(key, (vocab_size, dim), jnp.float32)) / math.sqrt(dim)
+
+    def embed(self, texts: Sequence[str]) -> np.ndarray:
+        out = np.zeros((len(texts), self.dim), dtype=np.float32)
+        for i, t in enumerate(texts):
+            ids = self.tok.encode(t)
+            if ids:
+                v = self.table[np.asarray(ids)].mean(0)
+                out[i] = v / (np.linalg.norm(v) + 1e-9)
+        return out
+
+
+class TransformerEmbedder(BaseEmbedder):
+    """Bidirectional transformer encoder + masked mean pool + projection."""
+
+    def __init__(self, dim: int = 384, d_model: int = 256, n_layers: int = 4,
+                 max_len: int = 128, seed: int = 0, batch_size: int = 64):
+        self.dim = dim
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self.cfg = encoder_config(d_model=d_model, n_layers=n_layers, dim=dim)
+        self.tok = HashTokenizer(self.cfg.vocab_size)
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        from repro.models import transformer
+        self.params = transformer.init(k1, self.cfg)
+        self.proj = L.dense_init(k2, (d_model, dim), jnp.float32)
+        self._encode = jax.jit(partial(_encode_fn, cfg=self.cfg))
+
+    def embed(self, texts: Sequence[str]) -> np.ndarray:
+        out = np.zeros((len(texts), self.dim), dtype=np.float32)
+        for lo in range(0, len(texts), self.batch_size):
+            batch = texts[lo:lo + self.batch_size]
+            tokens = self.tok.encode_batch(batch, self.max_len)
+            # pad the batch dim so jit sees a fixed shape
+            n = len(batch)
+            if n < self.batch_size:
+                tokens = np.pad(tokens, ((0, self.batch_size - n), (0, 0)))
+            vecs = self._encode(self.params, self.proj, jnp.asarray(tokens))
+            out[lo:lo + n] = np.asarray(vecs)[:n]
+        return out
+
+
+def _encode_fn(params, proj, tokens, *, cfg: ModelConfig):
+    """Non-causal encoder forward -> unit vectors [B, dim]."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, lp):
+        h = L.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        h = L.multihead_attention(lp["attn"], h, positions, cfg, causal=False)
+        x = x + h
+        h = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = x + L.mlp_apply(lp["mlp"], h, cfg.activation)
+        return x, ()
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    mask = (tokens > 0).astype(jnp.float32)[..., None]
+    pooled = (x.astype(jnp.float32) * mask).sum(1) / jnp.maximum(mask.sum(1), 1.0)
+    v = pooled @ proj
+    return v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-9)
+
+
+EMBEDDERS = {
+    "hash": HashEmbedder,
+    "transformer": TransformerEmbedder,
+}
+
+
+def make_embedder(kind: str = "hash", **kw) -> BaseEmbedder:
+    return EMBEDDERS[kind](**kw)

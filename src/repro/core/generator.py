@@ -1,0 +1,166 @@
+"""Generation stage (paper §3.3.4): a JAX serving engine behind ``BaseLLM``.
+
+``ModelLLM`` is the vLLM analogue: batched prefill fills the KV cache, then a
+jit'd greedy decode loop emits tokens; TTFT / TPOT are recorded per batch
+(the paper reads the same two metrics off vLLM's endpoint).  Any architecture
+in the zoo plugs in via its ModelConfig — the RAG pipeline is model-agnostic,
+which is the paper's point.
+
+``ExtractiveLLM`` is the deterministic quality oracle: it answers from the
+retrieved context with template matching.  Random-weight models cannot produce
+graded answers, so accuracy benchmarks (paper Fig. 8/9) use this backend while
+performance benchmarks use ``ModelLLM`` (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import re
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interfaces import BaseLLM, Chunk
+from repro.core.tokenizer import HashTokenizer
+from repro.models import api
+from repro.models.config import ModelConfig
+
+PROMPT_TEMPLATE = ("answer the question using the context\n"
+                   "context: {context}\nquestion: {question}\nanswer:")
+
+
+def build_prompt(question: str, contexts: Sequence[Chunk]) -> str:
+    ctx = " ".join(c.text for c in contexts)
+    return PROMPT_TEMPLATE.format(context=ctx, question=question)
+
+
+@dataclass
+class GenStats:
+    ttft_s: List[float] = field(default_factory=list)
+    tpot_s: List[float] = field(default_factory=list)
+    tokens_out: int = 0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "ttft_mean_s": float(np.mean(self.ttft_s)) if self.ttft_s else 0.0,
+            "tpot_mean_s": float(np.mean(self.tpot_s)) if self.tpot_s else 0.0,
+            "tokens_out": float(self.tokens_out),
+        }
+
+
+class ModelLLM(BaseLLM):
+    """Batched prefill + KV-cache greedy decode over any zoo architecture."""
+
+    def __init__(self, cfg: ModelConfig, max_prompt: int = 256,
+                 max_new: int = 16, batch_size: int = 8, seed: int = 0):
+        self.cfg = cfg
+        self.model = api.get_model(cfg)
+        self.max_prompt = max_prompt
+        self.max_new = max_new
+        self.batch_size = batch_size
+        self.tok = HashTokenizer(cfg.vocab_size)
+        self.params = self.model.init(jax.random.PRNGKey(seed), cfg)
+        self.stats = GenStats()
+        self._prefill = jax.jit(partial(self.model.prefill, cfg=cfg))
+        self._decode = jax.jit(partial(self.model.decode_step, cfg=cfg))
+
+    def _make_batch(self, tokens: np.ndarray) -> Dict:
+        batch = {"tokens": jnp.asarray(tokens)}
+        if self.cfg.family == "vlm":
+            # backbone-only: pretend patch embeddings for the token ids
+            B, S = tokens.shape
+            batch = {"embeds": jnp.zeros((B, S, self.cfg.d_model),
+                                         jnp.dtype(self.cfg.dtype))}
+        if self.cfg.family == "audio":
+            B = tokens.shape[0]
+            batch["frames"] = jnp.zeros(
+                (B, self.cfg.encoder_seq, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        return batch
+
+    def generate(self, prompts: Sequence[str],
+                 contexts: Sequence[Sequence[Chunk]]) -> List[str]:
+        out: List[str] = []
+        bs = self.batch_size
+        for lo in range(0, len(prompts), bs):
+            chunk_p = prompts[lo:lo + bs]
+            chunk_c = contexts[lo:lo + bs]
+            texts = [build_prompt(p, c) for p, c in zip(chunk_p, chunk_c)]
+            tokens = self.tok.encode_batch(texts, self.max_prompt)
+            if len(texts) < bs:   # pad batch dim for jit shape stability
+                tokens = np.pad(tokens, ((0, bs - len(texts)), (0, 0)))
+            out.extend(self._generate_batch(tokens)[:len(texts)])
+        return out
+
+    def _generate_batch(self, tokens: np.ndarray) -> List[str]:
+        B = tokens.shape[0]
+        max_len = self.max_prompt + self.max_new
+        cache = self.model.init_cache(self.cfg, B, max_len)
+        t0 = time.perf_counter()
+        if self.cfg.family == "audio":
+            # enc-dec: prompt feeds the decoder; frames feed the encoder
+            batch = self._make_batch(tokens)
+        else:
+            batch = self._make_batch(tokens)
+        logits, cache = self._prefill(self.params, batch=batch, cache=cache)
+        first = np.asarray(jnp.argmax(logits, axis=-1))
+        jax.block_until_ready(first)
+        self.stats.ttft_s.append(time.perf_counter() - t0)
+        toks = [first]
+        cur = jnp.asarray(first[:, None].astype(np.int32))
+        t1 = time.perf_counter()
+        for _ in range(self.max_new - 1):
+            step = {"tokens": cur}
+            if self.cfg.family == "vlm":
+                step = {"embeds": jnp.zeros(
+                    (B, 1, self.cfg.d_model), jnp.dtype(self.cfg.dtype))}
+            logits, cache = self._decode(self.params, batch=step, cache=cache)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            cur = nxt[:, None]
+            toks.append(np.asarray(nxt))
+        jax.block_until_ready(cur)
+        n_steps = max(self.max_new - 1, 1)
+        self.stats.tpot_s.append((time.perf_counter() - t1) / n_steps)
+        self.stats.tokens_out += B * self.max_new
+        ids = np.stack(toks, axis=1)          # [B, max_new]
+        return [" ".join(f"tok{t}" for t in row) for row in ids]
+
+
+_FACT = re.compile(r"the (\w+) of ([\w\-]+) is ([\w\-]+)")
+_Q = re.compile(r"what is the (\w+) of ([\w\-]+)")
+
+
+class ExtractiveLLM(BaseLLM):
+    """Deterministic reader: extracts `the <attr> of <subj> is <val>` facts
+    from the retrieved context.  Highest-version chunk wins (freshness)."""
+
+    def generate(self, prompts: Sequence[str],
+                 contexts: Sequence[Sequence[Chunk]]) -> List[str]:
+        out = []
+        for q, ctx in zip(prompts, contexts):
+            m = _Q.search(q.lower())
+            answer = ""
+            if m:
+                attr, subj = m.group(1), m.group(2)
+                best_ver = -1
+                for c in ctx:
+                    for fm in _FACT.finditer(c.text.lower()):
+                        if fm.group(1) == attr and fm.group(2) == subj \
+                                and c.version >= best_ver:
+                            best_ver = c.version
+                            answer = fm.group(3)
+            out.append(answer)
+        return out
+
+
+def make_llm(kind: str = "extractive", cfg: Optional[ModelConfig] = None,
+             **kw) -> BaseLLM:
+    if kind == "extractive":
+        return ExtractiveLLM()
+    if kind == "model":
+        assert cfg is not None
+        return ModelLLM(cfg, **kw)
+    raise ValueError(kind)

@@ -1,0 +1,180 @@
+"""The end-to-end configurable RAG pipeline (paper §3.3, Fig. 1/2).
+
+``RAGPipeline`` wires embedding → vector DB → (optional) reranking →
+generation behind the Fig. 4 interfaces.  Every stage is timed with
+``StageTimer`` and each request leaves a compact ``StageTrace`` (chunk ids
+only — paper §3.3.2/§3.3.3) for the post-hoc quality evaluation.
+
+``PipelineConfig`` exposes the paper's sensitivity knobs: retrieval depth
+(``retrieve_k``), rerank output depth (``rerank_k``), chunking method/size,
+embedding dimension, index scheme, hybrid-update policy and batch size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import chunking
+from repro.core.embedder import make_embedder
+from repro.core.generator import make_llm
+from repro.core.interfaces import (BaseEmbedder, BaseLLM, BaseReranker, Chunk,
+                                   DBInstance, StageTrace)
+from repro.core.reranker import make_reranker
+from repro.core.vectordb import DBConfig, JaxVectorDB
+from repro.monitor.monitor import StageTimer
+
+
+@dataclass
+class PipelineConfig:
+    # embedding
+    embedder: str = "hash"            # hash | transformer
+    embed_dim: int = 384
+    chunk_method: str = "separator"   # fixed | separator | semantic
+    chunk_size: int = 512
+    chunk_overlap: int = 0
+    # vector db
+    index_type: str = "ivf"           # flat | ivf
+    quant: str = "none"               # none | sq8 | pq
+    nlist: int = 64
+    nprobe: int = 8
+    capacity: int = 1 << 16
+    use_hybrid: bool = True
+    flat_capacity: int = 4096
+    rebuild_threshold: float = 0.75
+    use_kernel: bool = False
+    # rerank
+    reranker: str = "overlap"         # none | bi | cross | overlap
+    retrieve_k: int = 16              # initial retrieval depth
+    rerank_k: int = 4                 # context depth passed to generation
+    # generation
+    llm: str = "extractive"           # extractive | model
+    llm_arch: str = ""                # arch id when llm == "model"
+    llm_smoke: bool = True            # use the reduced config on CPU
+    gen_batch: int = 8
+    max_new_tokens: int = 16
+
+
+class RAGPipeline:
+    def __init__(self, cfg: PipelineConfig,
+                 embedder: Optional[BaseEmbedder] = None,
+                 db: Optional[DBInstance] = None,
+                 reranker: Optional[BaseReranker] = None,
+                 llm: Optional[BaseLLM] = None):
+        self.cfg = cfg
+        self.timer = StageTimer()
+        self.traces: List[StageTrace] = []
+        self.embedder = embedder or make_embedder(cfg.embedder, dim=cfg.embed_dim)
+        self.db = db or JaxVectorDB(DBConfig(
+            index_type=cfg.index_type, quant=cfg.quant, dim=cfg.embed_dim,
+            capacity=cfg.capacity, nlist=cfg.nlist, nprobe=cfg.nprobe,
+            use_hybrid=cfg.use_hybrid, flat_capacity=cfg.flat_capacity,
+            rebuild_threshold=cfg.rebuild_threshold, use_kernel=cfg.use_kernel))
+        if reranker is not None:
+            self.reranker = reranker
+        elif cfg.reranker == "none":
+            self.reranker = None
+        elif cfg.reranker == "bi":
+            self.reranker = make_reranker("bi", embedder=self.embedder)
+        else:
+            self.reranker = make_reranker(cfg.reranker)
+        if llm is not None:
+            self.llm = llm
+        elif cfg.llm == "model":
+            from repro import configs as arch_configs
+            mc = (arch_configs.get_smoke(cfg.llm_arch) if cfg.llm_smoke
+                  else arch_configs.get_config(cfg.llm_arch))
+            self.llm = make_llm("model", cfg=mc, batch_size=cfg.gen_batch,
+                                max_new=cfg.max_new_tokens)
+        else:
+            self.llm = make_llm("extractive")
+
+    # -- indexing path (paper Fig. 1 steps 1-3) -----------------------------
+
+    def index_documents(self, docs: Sequence[Tuple[int, str]],
+                        build: bool = True) -> int:
+        """Chunk + embed + insert documents [(doc_id, text)]; returns #chunks."""
+        chunks: List[Chunk] = []
+        with self.timer.stage("chunking"):
+            for doc_id, text in docs:
+                for start, end, piece in chunking.chunk_document(
+                        text, self.cfg.chunk_method, self.cfg.chunk_size,
+                        self.cfg.chunk_overlap):
+                    chunks.append(Chunk(-1, doc_id, piece, start, end))
+        if not chunks:
+            return 0
+        with self.timer.stage("embedding"):
+            vecs = self.embedder.embed([c.text for c in chunks])
+        with self.timer.stage("insertion"):
+            self.db.insert(vecs, chunks)
+        if build:
+            with self.timer.stage("index_build"):
+                self.db.build_index()
+        return len(chunks)
+
+    def update_document(self, doc_id: int, text: str, version: int = 1) -> int:
+        """Paper §3.2 update op: replace a document's chunks in place."""
+        chunks = [Chunk(-1, doc_id, piece, s, e, version=version)
+                  for s, e, piece in chunking.chunk_document(
+                      text, self.cfg.chunk_method, self.cfg.chunk_size,
+                      self.cfg.chunk_overlap)]
+        with self.timer.stage("embedding"):
+            vecs = self.embedder.embed([c.text for c in chunks])
+        with self.timer.stage("insertion"):
+            self.db.update(doc_id, vecs, chunks)
+        return len(chunks)
+
+    def remove_document(self, doc_id: int) -> int:
+        with self.timer.stage("removal"):
+            return self.db.remove(doc_id)
+
+    # -- query path (paper Fig. 1 steps 1-5) --------------------------------
+
+    def query(self, questions: Sequence[str],
+              ground_truth: Optional[Sequence[str]] = None,
+              gold_chunks: Optional[Sequence[List[int]]] = None
+              ) -> List[StageTrace]:
+        cfg = self.cfg
+        with self.timer.stage("query_embed"):
+            qvecs = self.embedder.embed(list(questions))
+        with self.timer.stage("retrieval"):
+            results = self.db.search(qvecs, cfg.retrieve_k)
+        all_candidates: List[List[Chunk]] = []
+        for r in results:
+            cands = [self.db.get_chunk(int(c)) for c in r.chunk_ids if c >= 0]
+            all_candidates.append([c for c in cands if c is not None])
+        contexts: List[List[Chunk]] = []
+        reranked_ids: List[List[int]] = []
+        if self.reranker is not None:
+            with self.timer.stage("rerank"):
+                for q, cands in zip(questions, all_candidates):
+                    top = self.reranker.rerank(q, cands, cfg.rerank_k)
+                    contexts.append([c for c, _ in top])
+                    reranked_ids.append([c.chunk_id for c, _ in top])
+        else:
+            contexts = [c[: cfg.rerank_k] for c in all_candidates]
+            reranked_ids = [[c.chunk_id for c in ctx] for ctx in contexts]
+        with self.timer.stage("generation"):
+            answers = self.llm.generate(list(questions), contexts)
+        traces = []
+        for i, q in enumerate(questions):
+            tr = StageTrace(
+                query=q,
+                retrieved_ids=[int(c) for c in results[i].chunk_ids if c >= 0],
+                reranked_ids=reranked_ids[i],
+                answer=answers[i],
+                ground_truth=(ground_truth[i] if ground_truth else ""),
+                gold_chunk_ids=(list(gold_chunks[i]) if gold_chunks else []),
+            )
+            traces.append(tr)
+        self.traces.extend(traces)
+        return traces
+
+    # -- profiling ----------------------------------------------------------
+
+    def breakdown(self) -> Dict[str, float]:
+        return self.timer.breakdown()
+
+    def db_stats(self) -> Dict[str, float]:
+        return self.db.stats()

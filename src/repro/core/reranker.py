@@ -1,0 +1,131 @@
+"""Reranking stage (paper §3.3.3).
+
+``BiEncoderReranker``   — low-latency: scores candidates by cosine between
+    independently-encoded query and chunk vectors (re-uses any BaseEmbedder).
+``CrossEncoderReranker`` — higher accuracy/cost: jointly encodes
+    ``query [SEP] chunk`` pairs through a transformer encoder with a scalar
+    scoring head, batched across candidates.
+``OverlapReranker``      — deterministic lexical-overlap scorer (the accuracy
+    oracle for metric tests; plays the role of a perfectly-trained reranker
+    on the synthetic corpus).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedder import TransformerEmbedder, encoder_config, _encode_fn
+from repro.core.interfaces import BaseEmbedder, BaseReranker, Chunk
+from repro.core.tokenizer import HashTokenizer
+from repro.models import layers as L
+from repro.models import transformer
+
+
+class BiEncoderReranker(BaseReranker):
+    def __init__(self, embedder: BaseEmbedder):
+        self.embedder = embedder
+
+    def rerank(self, query: str, candidates: Sequence[Chunk], topk: int
+               ) -> List[Tuple[Chunk, float]]:
+        if not candidates:
+            return []
+        vecs = self.embedder.embed([query] + [c.text for c in candidates])
+        scores = vecs[1:] @ vecs[0]
+        order = np.argsort(-scores)[:topk]
+        return [(candidates[i], float(scores[i])) for i in order]
+
+
+class CrossEncoderReranker(BaseReranker):
+    """Joint query‖doc scoring — the expensive, accurate family."""
+
+    def __init__(self, d_model: int = 256, n_layers: int = 4,
+                 max_len: int = 192, seed: int = 1, batch_size: int = 32):
+        self.cfg = encoder_config(d_model=d_model, n_layers=n_layers, dim=1)
+        self.tok = HashTokenizer(self.cfg.vocab_size)
+        self.max_len = max_len
+        self.batch_size = batch_size
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        self.params = transformer.init(k1, self.cfg)
+        self.head = L.dense_init(k2, (d_model, 1), jnp.float32)
+        self._score = jax.jit(partial(_cross_score, cfg=self.cfg))
+
+    def rerank(self, query: str, candidates: Sequence[Chunk], topk: int
+               ) -> List[Tuple[Chunk, float]]:
+        if not candidates:
+            return []
+        qids = self.tok.encode(query, self.max_len // 3)
+        scores = np.zeros(len(candidates), np.float32)
+        bs = self.batch_size
+        for lo in range(0, len(candidates), bs):
+            batch = candidates[lo:lo + bs]
+            toks = np.zeros((bs, self.max_len), np.int32)
+            for i, c in enumerate(batch):
+                ids = qids + [self.tok.sep_id] + self.tok.encode(c.text)
+                ids = ids[: self.max_len]
+                toks[i, :len(ids)] = ids
+            s = self._score(self.params, self.head, jnp.asarray(toks))
+            scores[lo:lo + len(batch)] = np.asarray(s)[:len(batch)]
+        order = np.argsort(-scores)[:topk]
+        return [(candidates[i], float(scores[i])) for i in order]
+
+
+def _cross_score(params, head, tokens, *, cfg):
+    """Encoder forward + mean-pool + linear head -> [B] scores."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, lp):
+        h = L.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        h = L.multihead_attention(lp["attn"], h, positions, cfg, causal=False)
+        x = x + h
+        h = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        return x + L.mlp_apply(lp["mlp"], h, cfg.activation), ()
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    mask = (tokens > 0).astype(jnp.float32)[..., None]
+    pooled = (x.astype(jnp.float32) * mask).sum(1) / jnp.maximum(mask.sum(1), 1.0)
+    return (pooled @ head)[:, 0]
+
+
+class OverlapReranker(BaseReranker):
+    """IDF-weighted lexical overlap (BM25-lite): deterministic quality oracle.
+
+    Document frequencies come from the candidate set itself, so words shared
+    by every candidate (filler) score ~0 while the discriminative query terms
+    (entity / attribute) dominate."""
+
+    def __init__(self):
+        self.tok = HashTokenizer()
+
+    def rerank(self, query: str, candidates: Sequence[Chunk], topk: int
+               ) -> List[Tuple[Chunk, float]]:
+        import math
+        qset = set(self.tok.content_words(query))
+        csets = [set(self.tok.content_words(c.text)) for c in candidates]
+        n = max(len(candidates), 1)
+        df = {w: sum(w in cs for cs in csets) for w in qset}
+        idf = {w: math.log(1.0 + n / (1.0 + df[w])) for w in qset}
+        scored = []
+        for c, cs in zip(candidates, csets):
+            s = sum(idf[w] for w in qset & cs)
+            # mild length normalization so padded chunks don't win on bulk
+            s /= math.sqrt(1.0 + len(cs) / 64.0)
+            scored.append((c, s))
+        scored.sort(key=lambda t: -t[1])
+        return scored[:topk]
+
+
+def make_reranker(kind: str, embedder: BaseEmbedder = None, **kw) -> BaseReranker:
+    if kind == "bi":
+        return BiEncoderReranker(embedder)
+    if kind == "cross":
+        return CrossEncoderReranker(**kw)
+    if kind == "overlap":
+        return OverlapReranker()
+    raise ValueError(kind)

@@ -1,0 +1,398 @@
+"""JAX-native vector database (paper §3.3.2).
+
+TPU adaptation (DESIGN.md §2): the index families are the MXU-friendly ones —
+Flat (exact matmul + top-k), IVF (k-means partitions, ``nprobe`` probing,
+fixed-capacity buckets so gathers are static-shaped), and the quantized
+variants SQ-int8 and PQ (ADC lookup).  HNSW/DiskANN pointer-chasing graphs do
+not map to the TPU memory system and are intentionally not ported.
+
+Update path mirrors the paper's hybrid design: a temporary *flat* index
+absorbs inserts/updates so fresh data is immediately searchable; queries merge
+top-k from the main ANN index and the flat buffer; ``rebuild()`` folds the
+buffer into the main index (paper §5.5 reproduces the latency sawtooth this
+creates).  Removals are tombstones until the next rebuild.
+
+All heavy scoring runs in jitted JAX (optionally via the Pallas kernels in
+``repro.kernels``); bookkeeping (payloads, id maps) is host-side numpy.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interfaces import Chunk, DBInstance, SearchResult
+from repro.kernels import ops as kops
+
+NEG = np.float32(-3.0e38)
+
+
+# ---------------------------------------------------------------------------
+# k-means (IVF training / PQ codebooks)
+# ---------------------------------------------------------------------------
+
+
+def kmeans(x: jnp.ndarray, k: int, iters: int = 10, seed: int = 0) -> jnp.ndarray:
+    """Lloyd's k-means on the device; returns [k, dim] centroids."""
+    n = x.shape[0]
+    key = jax.random.PRNGKey(seed)
+    idx = jax.random.choice(key, n, (k,), replace=n < k)
+    cent = x[idx]
+
+    @jax.jit
+    def step(cent):
+        scores = x @ cent.T                               # [n, k]
+        assign = jnp.argmax(scores, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)  # [n, k]
+        sums = onehot.T @ x                               # [k, dim]
+        counts = onehot.sum(0)[:, None]
+        new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1), cent)
+        return new / (jnp.linalg.norm(new, axis=1, keepdims=True) + 1e-9)
+
+    for _ in range(iters):
+        cent = step(cent)
+    return cent
+
+
+# ---------------------------------------------------------------------------
+# jitted search primitives (static shapes; cached per (capacity, k, ...))
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("k", "use_kernel"))
+def _flat_search(q, vecs, live, k: int, use_kernel: bool = False):
+    """Exact search. q:[nq,d] vecs:[cap,d] live:[cap] -> (scores, idx) [nq,k]."""
+    if use_kernel:
+        return kops.topk_search(q, vecs, live, k)
+    scores = q @ vecs.T                                   # [nq, cap]
+    scores = jnp.where(live[None, :], scores, NEG)
+    return jax.lax.top_k(scores, k)
+
+
+@partial(jax.jit, static_argnames=("nprobe", "k"))
+def _ivf_search(q, vecs, live, cent, buckets, bucket_live, nprobe: int, k: int):
+    """IVF probe: pick nprobe buckets per query, score their members.
+
+    buckets: [nlist, cap_b] int32 slot ids (-1 pad); bucket_live likewise bool.
+    """
+    cscores = q @ cent.T                                  # [nq, nlist]
+    _, probe = jax.lax.top_k(cscores, nprobe)             # [nq, nprobe]
+    cand = buckets[probe]                                 # [nq, nprobe, cap_b]
+    cand_ok = bucket_live[probe] & (cand >= 0)
+    cand_safe = jnp.maximum(cand, 0)
+    cvecs = vecs[cand_safe]                               # [nq, np, cap_b, d]
+    scores = jnp.einsum("qd,qpbd->qpb", q, cvecs)
+    ok = cand_ok & live[cand_safe]
+    scores = jnp.where(ok, scores, NEG)
+    nq = q.shape[0]
+    flat = scores.reshape(nq, -1)
+    top, pos = jax.lax.top_k(flat, k)
+    idx = jnp.take_along_axis(cand_safe.reshape(nq, -1), pos, axis=1)
+    idx = jnp.where(top <= NEG / 2, -1, idx)
+    return top, idx
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _sq8_flat_search(q, codes, scale, live, k: int):
+    """Scalar-quantized exact search via the quant_score kernel path."""
+    scores = kops.quant_score(q, codes, scale)
+    scores = jnp.where(live[None, :], scores, NEG)
+    return jax.lax.top_k(scores, k)
+
+
+@partial(jax.jit, static_argnames=("nprobe", "k"))
+def _pq_ivf_search(q, codes, codebook, live, cent, buckets, bucket_live,
+                   nprobe: int, k: int):
+    """PQ asymmetric-distance search inside probed IVF buckets.
+
+    codes: [cap, m] int32 in [0,256); codebook: [m, 256, dsub].
+    """
+    m, _, dsub = codebook.shape
+    nq = q.shape[0]
+    qs = q.reshape(nq, m, dsub)
+    lut = jnp.einsum("qms,mcs->qmc", qs, codebook)        # [nq, m, 256]
+    cscores = q @ cent.T
+    _, probe = jax.lax.top_k(cscores, nprobe)
+    cand = buckets[probe]                                 # [nq, np, cap_b]
+    cand_ok = bucket_live[probe] & (cand >= 0)
+    cand_safe = jnp.maximum(cand, 0)
+    ccodes = codes[cand_safe]                             # [nq, np, cap_b, m]
+    # ADC: sum LUT entries selected by each subspace code
+    gath = jnp.take_along_axis(
+        lut[:, None, None],                               # [nq,1,1,m,256]
+        ccodes[..., None], axis=-1)[..., 0]               # [nq,np,cap_b,m]
+    scores = gath.sum(-1)
+    ok = cand_ok & live[cand_safe]
+    scores = jnp.where(ok, scores, NEG)
+    flat = scores.reshape(nq, -1)
+    top, pos = jax.lax.top_k(flat, k)
+    idx = jnp.take_along_axis(cand_safe.reshape(nq, -1), pos, axis=1)
+    idx = jnp.where(top <= NEG / 2, -1, idx)
+    return top, idx
+
+
+def merge_topk(scores_a, idx_a, scores_b, idx_b, k: int):
+    """Merge two top-k lists (used for hybrid main+flat and sharded search)."""
+    scores = np.concatenate([scores_a, scores_b], axis=1)
+    idx = np.concatenate([idx_a, idx_b], axis=1)
+    order = np.argsort(-scores, axis=1)[:, :k]
+    return (np.take_along_axis(scores, order, axis=1),
+            np.take_along_axis(idx, order, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# the database
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DBConfig:
+    index_type: str = "ivf"          # flat | ivf
+    quant: str = "none"              # none | sq8 | pq
+    dim: int = 384
+    capacity: int = 1 << 16
+    nlist: int = 64
+    nprobe: int = 8
+    bucket_cap: int = 0              # 0 -> auto: 4 * capacity / nlist
+    pq_m: int = 8                    # PQ subspaces
+    kmeans_iters: int = 8
+    use_hybrid: bool = True          # temp flat buffer for fresh inserts
+    flat_capacity: int = 4096
+    rebuild_threshold: float = 0.75  # rebuild when flat buffer this full
+    use_kernel: bool = False         # Pallas topk_search for flat scoring
+    train_sample: int = 16384
+
+
+class JaxVectorDB(DBInstance):
+    """Unified vector DB: flat/IVF × {none, sq8, pq} × hybrid updates."""
+
+    def __init__(self, cfg: DBConfig):
+        self.cfg = cfg
+        d, cap = cfg.dim, cfg.capacity
+        self.vectors = np.zeros((cap, d), dtype=np.float32)
+        self.live = np.zeros((cap,), dtype=bool)
+        self.n_slots = 0                       # high-water mark
+        self.chunks: Dict[int, Chunk] = {}     # slot -> payload
+        self.doc_slots: Dict[int, List[int]] = {}
+        # main-index state
+        self.centroids: Optional[np.ndarray] = None
+        self.buckets: Optional[np.ndarray] = None
+        self.bucket_live: Optional[np.ndarray] = None
+        self.indexed = np.zeros((cap,), dtype=bool)   # covered by main index
+        self.sq_codes: Optional[np.ndarray] = None
+        self.sq_scale: Optional[np.ndarray] = None
+        self.pq_codes: Optional[np.ndarray] = None
+        self.pq_codebook: Optional[np.ndarray] = None
+        # profiling counters (read by the monitor)
+        self.counters: Dict[str, float] = {
+            "inserts": 0, "removals": 0, "searches": 0, "rebuilds": 0,
+            "insert_time_s": 0.0, "build_time_s": 0.0, "search_time_s": 0.0,
+            "flat_fill": 0.0,
+        }
+        if cfg.quant == "pq":
+            assert d % cfg.pq_m == 0, (d, cfg.pq_m)
+
+    # -- writes ------------------------------------------------------------
+
+    def insert(self, vectors: np.ndarray, chunks: Sequence[Chunk]) -> None:
+        t0 = time.perf_counter()
+        n = len(chunks)
+        assert vectors.shape == (n, self.cfg.dim)
+        if self.n_slots + n > self.cfg.capacity:
+            raise MemoryError(
+                f"vector store full ({self.n_slots}+{n} > {self.cfg.capacity})")
+        slots = np.arange(self.n_slots, self.n_slots + n)
+        self.n_slots += n
+        self.vectors[slots] = vectors
+        self.live[slots] = True
+        for s, c in zip(slots, chunks):
+            c.chunk_id = int(s)
+            self.chunks[int(s)] = c
+            self.doc_slots.setdefault(c.doc_id, []).append(int(s))
+        self.counters["inserts"] += n
+        self.counters["insert_time_s"] += time.perf_counter() - t0
+        if self._main_built() and self.cfg.use_hybrid:
+            self._maybe_rebuild()
+        elif self._main_built():
+            # no hybrid buffer: fresh rows invisible until the next rebuild
+            pass
+
+    def remove(self, doc_id: int) -> int:
+        slots = self.doc_slots.pop(doc_id, [])
+        for s in slots:
+            self.live[s] = False
+            self.chunks.pop(s, None)
+        self.counters["removals"] += len(slots)
+        return len(slots)
+
+    def update(self, doc_id: int, vectors: np.ndarray,
+               chunks: Sequence[Chunk]) -> None:
+        """Replace a document's chunks (delete + insert semantics)."""
+        self.remove(doc_id)
+        self.insert(vectors, chunks)
+
+    # -- index build -------------------------------------------------------
+
+    def _main_built(self) -> bool:
+        return self.cfg.index_type == "flat" or self.centroids is not None
+
+    def build_index(self) -> None:
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        live_idx = np.nonzero(self.live)[0]
+        if cfg.quant == "sq8":
+            self._train_sq()
+        if cfg.quant == "pq":
+            self._train_pq(live_idx)
+        if cfg.index_type == "ivf" and len(live_idx):
+            x = jnp.asarray(self.vectors[live_idx])
+            sample = live_idx
+            if len(live_idx) > cfg.train_sample:
+                rng = np.random.default_rng(0)
+                sample = rng.choice(live_idx, cfg.train_sample, replace=False)
+            self.centroids = np.asarray(
+                kmeans(jnp.asarray(self.vectors[sample]), cfg.nlist,
+                       cfg.kmeans_iters))
+            assign = np.asarray(
+                jnp.argmax(x @ jnp.asarray(self.centroids).T, axis=1))
+            cap_b = cfg.bucket_cap or max(
+                16, int(4 * cfg.capacity / cfg.nlist))
+            buckets = np.full((cfg.nlist, cap_b), -1, dtype=np.int32)
+            fill = np.zeros(cfg.nlist, dtype=np.int64)
+            overflow = 0
+            for slot, b in zip(live_idx, assign):
+                if fill[b] < cap_b:
+                    buckets[b, fill[b]] = slot
+                    fill[b] += 1
+                else:
+                    # spill to the globally least-full bucket (keeps recall)
+                    b2 = int(np.argmin(fill))
+                    if fill[b2] < cap_b:
+                        buckets[b2, fill[b2]] = slot
+                        fill[b2] += 1
+                    else:
+                        overflow += 1
+            self.buckets = buckets
+            self.bucket_live = buckets >= 0
+            if overflow:
+                raise MemoryError(f"{overflow} vectors overflowed IVF buckets")
+        self.indexed[:] = False
+        self.indexed[live_idx] = True
+        self.counters["rebuilds"] += 1
+        self.counters["build_time_s"] += time.perf_counter() - t0
+
+    def _train_sq(self):
+        live_idx = np.nonzero(self.live)[0]
+        x = self.vectors[: self.n_slots]
+        scale = np.abs(x[live_idx]).max(axis=0) / 127.0 + 1e-12 \
+            if len(live_idx) else np.ones(self.cfg.dim, np.float32)
+        self.sq_scale = scale.astype(np.float32)
+        codes = np.zeros((self.cfg.capacity, self.cfg.dim), dtype=np.int8)
+        codes[: self.n_slots] = np.clip(
+            np.round(x / scale), -127, 127).astype(np.int8)
+        self.sq_codes = codes
+
+    def _train_pq(self, live_idx):
+        cfg = self.cfg
+        m, dsub = cfg.pq_m, cfg.dim // cfg.pq_m
+        x = self.vectors[live_idx] if len(live_idx) else self.vectors[:1]
+        cb = np.zeros((m, 256, dsub), dtype=np.float32)
+        codes = np.zeros((cfg.capacity, m), dtype=np.int32)
+        for j in range(m):
+            sub = x[:, j * dsub:(j + 1) * dsub]
+            cb[j] = np.asarray(kmeans(jnp.asarray(sub), 256, cfg.kmeans_iters,
+                                      seed=j))
+            scores = sub @ cb[j].T
+            codes[live_idx, j] = np.argmax(scores, axis=1)
+        self.pq_codebook = cb
+        self.pq_codes = codes
+
+    def _maybe_rebuild(self):
+        fresh = int((self.live & ~self.indexed).sum())
+        self.counters["flat_fill"] = fresh / max(self.cfg.flat_capacity, 1)
+        if fresh >= self.cfg.rebuild_threshold * self.cfg.flat_capacity:
+            self.build_index()
+
+    # -- search ------------------------------------------------------------
+
+    def search(self, vectors: np.ndarray, k: int) -> List[SearchResult]:
+        t0 = time.perf_counter()
+        q = jnp.asarray(vectors, jnp.float32)
+        scores, idx = self._search_arrays(q, k)
+        self.counters["searches"] += len(vectors)
+        self.counters["search_time_s"] += time.perf_counter() - t0
+        return [SearchResult(chunk_ids=np.asarray(idx[i]),
+                             scores=np.asarray(scores[i]))
+                for i in range(len(vectors))]
+
+    def _search_arrays(self, q, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        cfg = self.cfg
+        main_live = self.live & self.indexed if cfg.use_hybrid else self.live
+        if not self._main_built():
+            # index never built: brute-force everything (cold start)
+            s, i = _flat_search(q, jnp.asarray(self.vectors),
+                                jnp.asarray(self.live), k, cfg.use_kernel)
+            return np.asarray(s), np.asarray(i)
+        s_main, i_main = self._search_main(q, jnp.asarray(main_live), k)
+        if not cfg.use_hybrid:
+            return np.asarray(s_main), np.asarray(i_main)
+        fresh = self.live & ~self.indexed
+        if not fresh.any():
+            return np.asarray(s_main), np.asarray(i_main)
+        # linear scan of the temp flat buffer (the paper's freshness path)
+        s_fl, i_fl = _flat_search(q, jnp.asarray(self.vectors),
+                                  jnp.asarray(fresh), k, cfg.use_kernel)
+        return merge_topk(np.asarray(s_main), np.asarray(i_main),
+                          np.asarray(s_fl), np.asarray(i_fl), k)
+
+    def _search_main(self, q, live, k: int):
+        cfg = self.cfg
+        if cfg.index_type == "flat":
+            if cfg.quant == "sq8" and self.sq_codes is not None:
+                return _sq8_flat_search(q, jnp.asarray(self.sq_codes),
+                                        jnp.asarray(self.sq_scale), live, k)
+            return _flat_search(q, jnp.asarray(self.vectors), live, k,
+                                cfg.use_kernel)
+        if cfg.quant == "pq" and self.pq_codes is not None:
+            return _pq_ivf_search(
+                q, jnp.asarray(self.pq_codes), jnp.asarray(self.pq_codebook),
+                live, jnp.asarray(self.centroids), jnp.asarray(self.buckets),
+                jnp.asarray(self.bucket_live), cfg.nprobe, k)
+        return _ivf_search(q, jnp.asarray(self.vectors), live,
+                           jnp.asarray(self.centroids),
+                           jnp.asarray(self.buckets),
+                           jnp.asarray(self.bucket_live), cfg.nprobe, k)
+
+    # -- misc --------------------------------------------------------------
+
+    def get_chunk(self, chunk_id: int) -> Optional[Chunk]:
+        return self.chunks.get(int(chunk_id))
+
+    def stats(self) -> Dict[str, float]:
+        cfg = self.cfg
+        vec_bytes = self.n_slots * cfg.dim * 4
+        index_bytes = 0
+        if self.centroids is not None:
+            index_bytes += self.centroids.nbytes + self.buckets.nbytes
+        if self.sq_codes is not None:
+            index_bytes += self.n_slots * cfg.dim
+        if self.pq_codes is not None:
+            index_bytes += self.n_slots * cfg.pq_m + self.pq_codebook.nbytes
+        return {
+            "live": float(self.live.sum()),
+            "slots": float(self.n_slots),
+            "vector_bytes": float(vec_bytes),
+            "index_bytes": float(index_bytes),
+            "fresh": float((self.live & ~self.indexed).sum()),
+            **self.counters,
+        }
+
+
+def make_db(index_type: str = "ivf", quant: str = "none", **kw) -> JaxVectorDB:
+    return JaxVectorDB(DBConfig(index_type=index_type, quant=quant, **kw))

@@ -1,0 +1,168 @@
+"""Fault tolerance & elasticity manager (DESIGN.md §6).
+
+On a real multi-pod deployment each host runs this next to the training loop:
+
+  * ``Heartbeat`` — every worker stamps (host_id, step, t) after each step;
+    the coordinator's view is a shared file/kv-store (here: local dict or
+    directory of stamp files — the mechanism is transport-agnostic).
+  * ``StragglerDetector`` — per-step duration quantiles; a worker whose step
+    time exceeds ``quantile × tolerance`` is flagged so the launcher can
+    preempt/replace it before it stalls the collective.
+  * ``ElasticPlan`` — given surviving device count, choose the largest valid
+    (data, model) mesh ≤ devices that preserves TP degree, and re-shard from
+    the latest checkpoint (checkpoints are host-numpy by tree path, so any
+    mesh can load them — see train/checkpoint.py).
+
+Recovery loop: detect failure → pick plan → restore_latest → continue.  The
+data pipeline being a pure function of (seed, step) makes the restart
+bitwise-deterministic.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Heartbeat:
+    host_id: int
+    step: int
+    t: float
+
+
+class HeartbeatTracker:
+    """Coordinator view of worker liveness."""
+
+    def __init__(self, n_hosts: int, timeout_s: float = 60.0,
+                 directory: Optional[str] = None):
+        self.n_hosts = n_hosts
+        self.timeout_s = timeout_s
+        self.dir = directory
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+        self.beats: Dict[int, Heartbeat] = {}
+
+    def stamp(self, host_id: int, step: int, t: Optional[float] = None) -> None:
+        t = time.time() if t is None else t
+        hb = Heartbeat(host_id, step, t)
+        self.beats[host_id] = hb
+        if self.dir:
+            path = os.path.join(self.dir, f"host_{host_id}.json")
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(hb.__dict__, f)
+            os.replace(tmp, path)
+
+    def refresh_from_disk(self) -> None:
+        if not self.dir:
+            return
+        for name in os.listdir(self.dir):
+            if name.startswith("host_") and name.endswith(".json"):
+                try:
+                    with open(os.path.join(self.dir, name)) as f:
+                        d = json.load(f)
+                    self.beats[d["host_id"]] = Heartbeat(**d)
+                except (OSError, ValueError, KeyError):
+                    continue
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = time.time() if now is None else now
+        dead = []
+        for h in range(self.n_hosts):
+            hb = self.beats.get(h)
+            if hb is None or now - hb.t > self.timeout_s:
+                dead.append(h)
+        return dead
+
+    def alive(self, now: Optional[float] = None) -> int:
+        return self.n_hosts - len(self.dead_hosts(now))
+
+
+class StragglerDetector:
+    """Quantile-based straggler flagging over per-host step durations."""
+
+    def __init__(self, window: int = 50, quantile: float = 0.5,
+                 tolerance: float = 2.0):
+        self.window = window
+        self.quantile = quantile
+        self.tolerance = tolerance
+        self.durations: Dict[int, List[float]] = {}
+
+    def record(self, host_id: int, duration_s: float) -> None:
+        xs = self.durations.setdefault(host_id, [])
+        xs.append(duration_s)
+        if len(xs) > self.window:
+            xs.pop(0)
+
+    def stragglers(self) -> List[int]:
+        if len(self.durations) < 2:
+            return []
+        medians = {h: float(np.median(xs))
+                   for h, xs in self.durations.items() if xs}
+        fleet = float(np.quantile(list(medians.values()), self.quantile))
+        return [h for h, m in medians.items()
+                if m > self.tolerance * fleet]
+
+
+@dataclass
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+    devices_used: int
+    dropped: int
+
+
+def plan_elastic_mesh(n_devices: int, model_parallel: int,
+                      multi_pod_size: int = 0) -> ElasticPlan:
+    """Largest (pod, data, model) mesh fitting n_devices.
+
+    TP degree is preserved (re-sharding TP mid-run changes per-op layouts and
+    compiled artifacts; DP is the elastic axis — standard practice).
+    """
+    assert n_devices >= model_parallel, (n_devices, model_parallel)
+    if multi_pod_size and n_devices >= 2 * multi_pod_size:
+        pods = n_devices // multi_pod_size
+        data = multi_pod_size // model_parallel
+        used = pods * data * model_parallel
+        return ElasticPlan((pods, data, model_parallel),
+                           ("pod", "data", "model"), used,
+                           n_devices - used)
+    data = n_devices // model_parallel
+    used = data * model_parallel
+    return ElasticPlan((data, model_parallel), ("data", "model"),
+                       used, n_devices - used)
+
+
+class FaultTolerantRunner:
+    """Glue: heartbeat + straggler + checkpoint-restart around a step fn."""
+
+    def __init__(self, ckpt_manager, heartbeats: HeartbeatTracker,
+                 stragglers: StragglerDetector, host_id: int = 0,
+                 ckpt_every: int = 100):
+        self.ckpt = ckpt_manager
+        self.hb = heartbeats
+        self.sd = stragglers
+        self.host_id = host_id
+        self.ckpt_every = ckpt_every
+
+    def run(self, state, step_fn, batch_iter, n_steps: int, start_step: int = 0):
+        step = start_step
+        metrics = None
+        for batch in batch_iter:
+            if step >= n_steps:
+                break
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            dt = time.perf_counter() - t0
+            self.hb.stamp(self.host_id, step)
+            self.sd.record(self.host_id, dt)
+            step += 1
+            if step % self.ckpt_every == 0:
+                self.ckpt.save(state, step)
+        self.ckpt.save(state, step, blocking=True)
+        return state, step, metrics

@@ -1,0 +1,195 @@
+"""Partition rules: param / optimizer / cache / batch PartitionSpecs.
+
+Megatron-style TP for the transformer families via name rules, a shape
+heuristic fallback for the recurrent families, ZeRO-1 sharding of optimizer
+moments over the data axes, and batch/cache specs for serving.
+
+Name rules (path substring, first match wins — checked against the flattened
+tree path):
+  embed        -> vocab dim (0) over "model"         (vocab-parallel table)
+  lm_head      -> vocab dim (-1) over "model"
+  router       -> expert dim (-1) over "model"
+  moe/w_*      -> expert dim (first after layer stack) over "model" (EP)
+  wq|wk|wv     -> output dim (-1) over "model"       (column parallel)
+  w_up|w_gate  -> output dim (-1) over "model"
+  wo|w_down    -> input dim (-2) over "model"        (row parallel)
+  norm|bias|dt -> replicated
+Fallback: shard the largest of the trailing two dims divisible by the model
+axis; replicate otherwise.  Leading stacked-layer dims are never sharded
+(sharding the scan axis serializes into per-layer collectives).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)] or [1]))
+
+
+def model_size(mesh: Mesh) -> int:
+    return int(mesh.shape.get("model", 1))
+
+
+def _axis_entry(axes):
+    """PartitionSpec entry for one dim: str for one axis, tuple for several."""
+    if isinstance(axes, tuple) and len(axes) == 1:
+        return axes[0]
+    return axes
+
+
+def _spec_with(ndim: int, assignments: Dict[int, Any]) -> P:
+    out = [None] * ndim
+    for dim, ax in assignments.items():
+        out[dim % ndim] = _axis_entry(ax)
+    return P(*out)
+
+
+_REPLICATED = re.compile(r"norm|bias|\bdt\b|'dt'|logA|conv|pos_emb")
+
+
+def leaf_param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    m = model_size(mesh)
+    nd = len(shape)
+    if nd <= 1 or m <= 1 or _REPLICATED.search(path):
+        return P()
+    # sLSTM blocks are tiny (few M params) but their block-diagonal
+    # recurrence runs once per TIME STEP — sharding their weights turns the
+    # recurrent matvec into a per-step psum (48 GB/chip/step measured).
+    # Replicate them (§Perf cell A iteration 3).
+    if "slstm" in path:
+        return P()
+
+    def ok(dim):        # dim shardable over the model axis?
+        return shape[dim % nd] % m == 0
+
+    if "embed" in path and ok(0):
+        return _spec_with(nd, {0: "model"})
+    if "lm_head" in path and ok(-1):
+        return _spec_with(nd, {-1: "model"})
+    if "router" in path and ok(-1):
+        return _spec_with(nd, {-1: "model"})
+    if "moe" in path and nd >= 3:
+        e_dim = nd - 3          # [*stack, E, d, f]
+        if shape[e_dim] % m == 0:
+            return _spec_with(nd, {e_dim: "model"})
+    if re.search(r"w[qkv]\b|'w[qkv]'|w_up|w_gate", path) and ok(-1):
+        return _spec_with(nd, {-1: "model"})
+    if re.search(r"\bwo\b|'wo'|w_down", path) and ok(-2):
+        return _spec_with(nd, {-2: "model"})
+    # fallback: largest trailing dim divisible by the model axis
+    cands = [d for d in (nd - 1, nd - 2) if shape[d] % m == 0 and shape[d] >= m]
+    if cands:
+        best = max(cands, key=lambda d: shape[d])
+        return _spec_with(nd, {best: "model"})
+    return P()
+
+
+def param_specs(shapes_tree, mesh: Mesh):
+    """Pytree of PartitionSpec matching a param ShapeDtypeStruct tree."""
+    def one(path, leaf):
+        return leaf_param_spec(jax.tree_util.keystr(path), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, shapes_tree)
+
+
+def zero_spec(pspec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO-1: additionally shard the largest unsharded trailing dim of an
+    optimizer moment over the data axes."""
+    d = dp_axes(mesh)
+    n = dp_size(mesh)
+    if n <= 1 or len(shape) < 1:
+        return pspec
+    entries = list(pspec) + [None] * (len(shape) - len(pspec))
+    cands = [i for i in range(len(shape))
+             if entries[i] is None and shape[i] % n == 0 and shape[i] >= n]
+    if not cands:
+        return pspec
+    best = max(cands, key=lambda i: shape[i])
+    entries[best] = _axis_entry(d)
+    return P(*entries)
+
+
+def opt_state_specs(param_shapes, mesh: Mesh):
+    pspecs = param_specs(param_shapes, mesh)
+
+    def one(spec, leaf):
+        return zero_spec(spec, leaf.shape, mesh)
+
+    moments = jax.tree.map(one, pspecs, param_shapes)
+    return {"mu": moments, "nu": moments, "step": P()}
+
+
+def train_state_specs(state_shapes, mesh: Mesh):
+    out = {"params": param_specs(state_shapes["params"], mesh),
+           "opt": opt_state_specs(state_shapes["params"], mesh)}
+    if "err" in state_shapes:
+        out["err"] = jax.tree.map(
+            lambda spec, leaf: zero_spec(spec, leaf.shape, mesh),
+            param_specs(state_shapes["params"], mesh),
+            state_shapes["err"])
+    return out
+
+
+def batch_specs(batch_shapes, mesh: Mesh, global_batch: int):
+    """Shard the batch dim over (pod, data); everything else replicated."""
+    d = dp_axes(mesh)
+    n = dp_size(mesh)
+
+    def one(leaf):
+        shape = leaf.shape
+        if shape and shape[0] == global_batch and n > 1 \
+                and shape[0] % n == 0:
+            return _spec_with(len(shape), {0: d})
+        # microbatched train batches: [accum, B/accum, ...]
+        if len(shape) >= 2 and shape[1] % n == 0 and n > 1 \
+                and shape[1] * (shape[0] or 1) == global_batch:
+            return _spec_with(len(shape), {1: d})
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh: Mesh, batch: int, max_len: int):
+    """Serving cache: batch dim over (pod,data); longest remaining dim
+    (typically kv_seq) over "model"."""
+    d = dp_axes(mesh)
+    ndp = dp_size(mesh)
+    m = model_size(mesh)
+
+    def one(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        entries: Dict[int, Any] = {}
+        bdims = [i for i, s in enumerate(shape) if s == batch]
+        if bdims and ndp > 1 and batch % ndp == 0:
+            entries[bdims[0]] = d
+        if m > 1:
+            cands = [i for i, s in enumerate(shape)
+                     if i not in entries and s % m == 0 and s >= m
+                     and i not in bdims]
+            if cands:
+                # ties broken toward the trailing dim: for recurrent states
+                # [.., d_k, d_v] sharding d_v keeps the q·C contraction
+                # (over d_k) local — no per-step reshard (§Perf cell C)
+                entries[max(cands, key=lambda i: (shape[i], i))] = "model"
+        return _spec_with(nd, entries)
+
+    return jax.tree.map(one, cache_shapes)
+
+
+def as_named(tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,54 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op dispatches on the runtime platform:
+  * TPU      — compiled Pallas kernel (the target path);
+  * CPU      — ``interpret=True`` Pallas (correctness validation), or the
+               pure-XLA fallback when ``REPRO_KERNEL_MODE=xla`` (fast for
+               large benchmark runs, identical semantics).
+
+The dry-run always lowers the XLA fallback: host-CPU placeholder devices
+cannot lower real Mosaic kernels, and the roofline terms come from HLO cost
+analysis which the fallback represents faithfully.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quant_score as _qs
+from repro.kernels import ref
+from repro.kernels import topk_search as _ts
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_KERNEL_MODE")
+    if env:
+        return env                       # "pallas" | "interpret" | "xla"
+    platform = jax.default_backend()
+    return "pallas" if platform == "tpu" else "interpret"
+
+
+def topk_search(q, vecs, live, k: int):
+    mode = _mode()
+    if mode == "xla":
+        return ref.topk_search(q, vecs, live, k)
+    return _ts.topk_search_pallas(q, vecs, live, k,
+                                  interpret=(mode != "pallas"))
+
+
+def quant_score(q, codes, scale):
+    mode = _mode()
+    if mode == "xla":
+        return ref.quant_score(q, codes, scale)
+    return _qs.quant_score_pallas(q, codes, scale,
+                                  interpret=(mode != "pallas"))
+
+
+def flash_attention(q, k, v, *, causal: bool = True):
+    mode = _mode()
+    if mode == "xla":
+        return ref.flash_attention(q, k, v, causal=causal)
+    return _fa.flash_attention_pallas(q, k, v, causal=causal,
+                                      interpret=(mode != "pallas"))

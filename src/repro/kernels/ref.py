@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-3.0e38)
+
+
+def topk_search(q, vecs, live, k: int):
+    """Exact similarity top-k.  q:[nq,d] vecs:[N,d] live:[N] bool.
+
+    Returns (scores [nq,k], idx [nq,k] int32).
+    """
+    scores = q @ vecs.T
+    scores = jnp.where(live[None, :], scores, NEG)
+    return jax.lax.top_k(scores, k)
+
+
+def quant_score(q, codes, scale):
+    """SQ-int8 scoring.  q:[nq,d] f32, codes:[N,d] int8, scale:[d] f32.
+
+    score[i,j] = sum_d q[i,d] * codes[j,d] * scale[d]
+    """
+    qs = q * scale[None, :]
+    return qs @ codes.astype(jnp.float32).T
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Reference attention.  q:[B,H,S,dh], k/v:[B,Hkv,S,dh] (GQA repeat).
+
+    Returns [B,H,S,dh].
+    """
+    B, H, S, dh = q.shape
+    hkv = k.shape[1]
+    rep = H // hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    s = scale if scale is not None else 1.0 / math.sqrt(dh)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * s
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)

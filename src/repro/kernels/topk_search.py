@@ -1,0 +1,97 @@
+"""Fused similarity × top-k retrieval kernel (the retrieval-stage hot loop).
+
+Motivation (DESIGN.md §2): the flat / temp-flat search computes ``q @ vecs.T``
+and immediately reduces it to k winners.  Materializing the full ``[nq, N]``
+score matrix in HBM costs 4·nq·N bytes of write+read traffic that the MXU
+result never needs.  The kernel streams corpus tiles HBM→VMEM, scores a
+``[bq, bn]`` tile on the MXU, and reduces it *in VMEM* to a per-tile top-k;
+only ``[nq, n_tiles, k]`` candidates (≪ [nq, N]) ever reach HBM.  A cheap
+``lax.top_k`` merge outside the kernel produces the global winners.
+
+Tiling: bq rows of queries stay VMEM-resident across the whole sweep of a
+corpus tile; corpus tiles are (bn, d) with bn a multiple of 128 (lane dim) so
+the q·cᵀ contraction is MXU-aligned.  VMEM footprint per step =
+bq·d + bn·d + bq·bn floats, sized well under 16 MB for the default tiles.
+
+The in-tile top-k uses k rounds of (max, argmax, mask) on the VMEM tile —
+k ≤ 64 and the tile is register/VMEM-local, so this costs k·bq·bn VPU flops,
+negligible next to the bq·bn·d MXU flops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -3.0e38
+
+
+def _topk_tile_kernel(q_ref, vecs_ref, live_ref, out_s_ref, out_i_ref, *,
+                      k: int, bn: int):
+    """One grid step: score one (bq × bn) tile, emit its local top-k."""
+    j = pl.program_id(1)                         # corpus-tile index
+    q = q_ref[...]                               # [bq, d]   (VMEM)
+    vt = vecs_ref[...]                           # [bn, d]   (VMEM)
+    live = live_ref[...]                         # [bn] int8
+    scores = jax.lax.dot_general(
+        q, vt, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # [bq, bn] on the MXU
+    scores = jnp.where(live[None, :] != 0, scores, NEG)
+    base = j * bn
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+
+    def body(t, carry):
+        scores, col = carry
+        m = jnp.max(scores, axis=1)                          # [bq]
+        am = jnp.argmax(scores, axis=1)                      # [bq]
+        out_s_ref[:, 0, t] = m
+        out_i_ref[:, 0, t] = (base + am).astype(jnp.int32)
+        # mask the winner so the next round finds the runner-up
+        hit = col == am[:, None]
+        return jnp.where(hit, NEG, scores), col
+
+    jax.lax.fori_loop(0, k, body, (scores, col))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "bn", "interpret"))
+def topk_search_pallas(q, vecs, live, k: int, *, bq: int = 128, bn: int = 1024,
+                       interpret: bool = True):
+    """q:[nq,d] vecs:[N,d] live:[N] -> (scores [nq,k], idx [nq,k])."""
+    nq, d = q.shape
+    N = vecs.shape[0]
+    # pad to tile multiples
+    nq_p = -(-nq // bq) * bq
+    n_p = -(-N // bn) * bn
+    qp = jnp.pad(q, ((0, nq_p - nq), (0, 0)))
+    vp = jnp.pad(vecs, ((0, n_p - N), (0, 0)))
+    lp = jnp.pad(live.astype(jnp.int8), (0, n_p - N))
+    nt = n_p // bn
+    grid = (nq_p // bq, nt)
+
+    out_s, out_i = pl.pallas_call(
+        functools.partial(_topk_tile_kernel, k=k, bn=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, 1, k), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bq, 1, k), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq_p, nt, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq_p, nt, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, vp, lp)
+
+    # global merge of nt*k candidates per query (tiny: nt*k ≪ N)
+    cand_s = out_s[:nq].reshape(nq, nt * k)
+    cand_i = out_i[:nq].reshape(nq, nt * k)
+    top, pos = jax.lax.top_k(cand_s, k)
+    idx = jnp.take_along_axis(cand_i, pos, axis=1)
+    return top, jnp.where(top <= NEG / 2, -1, idx)

@@ -1,0 +1,137 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: sharding
+mismatches, compile-time OOM and unsupported collectives all surface here.
+Outputs per-cell memory analysis, cost analysis and the three-term roofline
+(§Roofline) as JSON under reports/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3_8b --shape train_4k
+  python -m repro.launch.dryrun --arch llama3_8b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod] [--out reports/dryrun]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES
+from repro.roofline.analysis import roofline_report
+from repro.train.train_step import TrainConfig
+
+
+OPTIMIZATIONS = {
+    # §Perf hillclimb changes, applied with --opt (paper-faithful baseline
+    # stays the default; see EXPERIMENTS.md §Perf for the iteration log)
+    "mlstm_chunk": lambda cfg: cfg.replace(mlstm_chunk=256)
+    if cfg.family == "ssm" else cfg,
+}
+
+
+def apply_optimizations(cfg):
+    for fn in OPTIMIZATIONS.values():
+        cfg = fn(cfg)
+    return cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             out_dir: str = "reports/dryrun", verbose: bool = True,
+             train_cfg: TrainConfig = None, tag: str = "", opt: bool = False):
+    cfg = configs.get_config(arch)
+    if opt:
+        cfg = apply_optimizations(cfg)
+        tag = tag or "_opt"
+    shape = SHAPES[shape_name]
+    if not configs.supports_shape(cfg, shape_name):
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "long_500k requires a sub-quadratic token path "
+                          "(full-attention arch; see DESIGN.md §4)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.perf_counter()
+    cell = specs_lib.build_cell(cfg, shape, mesh, train_cfg=train_cfg)
+    lowered = specs_lib.lower_cell(cell, mesh)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+    report = roofline_report(compiled, cfg, shape, n_chips)
+    report.update({
+        "status": "ok",
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "multi_pod": multi_pod,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+    })
+    if verbose:
+        mem = compiled.memory_analysis()
+        print(f"[{arch} × {shape_name} × {report['mesh']}] "
+              f"kind={cell.kind}")
+        print(f"  memory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"out={mem.output_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB per device")
+        print(f"  cost_analysis: flops/chip={report['flops_per_chip']:.3e} "
+              f"bytes/chip={report['bytes_per_chip']:.3e}")
+        print(f"  roofline: compute={report['compute_s']*1e3:.2f}ms "
+              f"memory={report['memory_s']*1e3:.2f}ms "
+              f"collective={report['collective_s']*1e3:.2f}ms "
+              f"-> {report['bottleneck']}-bound, "
+              f"useful={report['useful_flop_ratio']:.2f}, "
+              f"roofline_frac={report['roofline_fraction']:.2f}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        mesh_tag = "pod2" if multi_pod else "pod1"
+        name = f"{arch}_{shape_name}_{mesh_tag}{tag}.json"
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(report, f, indent=1)
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the §Perf optimization set")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in configs.ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        try:
+            r = run_cell(arch, shape, multi_pod=args.multi_pod,
+                         out_dir=args.out, opt=args.opt)
+            if r["status"] == "skipped":
+                print(f"[{arch} × {shape}] SKIP: {r['reason']}")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, shape, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print(f"dry-run ok: {len(cells)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Per-cell step functions + ShapeDtypeStruct input specs + shardings.
+
+``build_cell(cfg, shape)`` returns everything the dry-run needs to AOT-lower
+one (architecture × input-shape) cell: the step callable, the example input
+tree (ShapeDtypeStructs only — nothing is allocated), and in/out
+PartitionSpecs.  Shape semantics follow the brief:
+
+  train_4k     -> train_step(state, batch)            (fwd+bwd+AdamW)
+  prefill_32k  -> prefill(params, batch, cache)       (prompt pass)
+  decode_32k   -> serve_step: decode one new token against a KV/state cache
+                  of seq_len
+  long_500k    -> same serve_step at 524288 (sub-quadratic archs only)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import partition as pt
+from repro.models import api
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.train.train_step import TrainConfig, make_train_step, train_state_shape
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def model_batch_shapes(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    """Input tree for forward/loss of one family (tokens or stub embeds)."""
+    out: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        # stub frontend: precomputed patch embeddings (brief: [vlm]/[audio]
+        # entries are backbone-only)
+        out["embeds"] = _sds((batch, seq, cfg.d_model), cfg.dtype)
+    else:
+        out["tokens"] = _sds((batch, seq), "int32")
+    if cfg.family == "audio":
+        out["frames"] = _sds((batch, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    return out
+
+
+def train_batch_shapes(cfg: ModelConfig, batch: int, seq: int,
+                       accum: int = 1) -> Dict:
+    shapes = model_batch_shapes(cfg, batch, seq)
+    shapes["labels"] = _sds((batch, seq), "int32")
+    if accum > 1:
+        shapes = jax.tree.map(
+            lambda s: _sds((accum, s.shape[0] // accum, *s.shape[1:]),
+                           s.dtype), shapes)
+    return shapes
+
+
+@dataclass
+class Cell:
+    """One dry-run unit: callable + example inputs + shardings."""
+    fn: Callable
+    inputs: Tuple          # ShapeDtypeStruct pytrees (positional)
+    in_specs: Tuple        # PartitionSpec pytrees
+    out_specs: Any         # PartitionSpec pytree or None (infer)
+    kind: str
+    rules: dict = None     # logical-axis rule overrides (family-aware)
+
+
+def family_rules(cfg: ModelConfig) -> dict:
+    """Per-family logical-rule overrides.
+
+    §Perf cell A iteration 2 tried ``{"seq": None}`` for recurrent families
+    (hypothesis: SP residuals force per-layer sequence all-gathers).
+    REFUTED: with seq sharded, GSPMD keeps the quadratic [B,nh,S,S] decay
+    tensors sharded over one S dim (16×) and psums move [B,S/16,d] slices;
+    replicating seq blew memory +70% and collectives +60%.  Sequence
+    sharding is the right layout even for recurrent forms — kept as-is."""
+    return {}
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               train_cfg: TrainConfig = None) -> Cell:
+    model = api.get_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tcfg = train_cfg or TrainConfig()
+        state_shapes = train_state_shape(cfg, tcfg)
+        batch_shapes = train_batch_shapes(cfg, B, S, tcfg.accum_steps)
+        state_specs = pt.train_state_specs(state_shapes, mesh)
+        bspecs = pt.batch_specs(batch_shapes, mesh, B)
+        step = make_train_step(cfg, tcfg)
+        return Cell(fn=step, inputs=(state_shapes, batch_shapes),
+                    in_specs=(state_specs, bspecs),
+                    out_specs=(state_specs, None), kind="train",
+                    rules=family_rules(cfg))
+
+    pshapes = api.get_model(cfg).init_shape(cfg)
+    pspecs = pt.param_specs(pshapes, mesh)
+    if shape.kind == "prefill":
+        batch_shapes = model_batch_shapes(cfg, B, S)
+        cache_shapes = model.init_cache_shape(cfg, B, S)
+        bspecs = pt.batch_specs(batch_shapes, mesh, B)
+        cspecs = pt.cache_specs(cache_shapes, mesh, B, S)
+
+        def prefill_fn(params, batch, cache):
+            return model.prefill(params, cfg, batch, cache)
+
+        return Cell(fn=prefill_fn,
+                    inputs=(pshapes, batch_shapes, cache_shapes),
+                    in_specs=(pspecs, bspecs, cspecs),
+                    out_specs=(None, cspecs), kind="prefill",
+                    rules=family_rules(cfg))
+
+    # decode: one new token, KV/state cache of seq_len
+    batch_shapes = model_batch_shapes(cfg, B, 1)
+    cache_shapes = model.init_cache_shape(cfg, B, S)
+    bspecs = pt.batch_specs(batch_shapes, mesh, B)
+    cspecs = pt.cache_specs(cache_shapes, mesh, B, S)
+
+    def serve_step(params, batch, cache):
+        return model.decode_step(params, cfg, batch, cache)
+
+    return Cell(fn=serve_step,
+                inputs=(pshapes, batch_shapes, cache_shapes),
+                in_specs=(pspecs, bspecs, cspecs),
+                out_specs=(None, cspecs), kind="decode",
+                rules=family_rules(cfg))
+
+
+def lower_cell(cell: Cell, mesh: Mesh):
+    """AOT-lower one cell on the mesh (no allocation)."""
+    from repro.distributed.sharding import sharding_rules
+    in_shardings = jax.tree.map(
+        lambda spec: jax.NamedSharding(mesh, spec), cell.in_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    out_shardings = None if cell.out_specs is None else jax.tree.map(
+        lambda spec: jax.NamedSharding(mesh, spec), cell.out_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    # out_specs trees may contain None subtrees meaning "infer"
+    jit_kwargs = dict(in_shardings=in_shardings)
+    with sharding_rules(mesh, cell.rules):
+        jitted = jax.jit(cell.fn, **jit_kwargs)
+        lowered = jitted.lower(*cell.inputs)
+    return lowered

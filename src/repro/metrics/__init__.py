@@ -1,0 +1,2 @@
+from repro.metrics.quality import (  # noqa: F401
+    context_recall, query_accuracy, factual_consistency, evaluate_traces)

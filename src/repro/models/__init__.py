@@ -1,0 +1,1 @@
+from repro.models.config import ModelConfig, MoEConfig, ShapeConfig, SHAPES  # noqa: F401

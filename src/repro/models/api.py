@@ -1,0 +1,72 @@
+"""Uniform model API: family string -> module implementing the zoo protocol.
+
+Every family module exposes::
+
+    init_shape(cfg)                    -> param ShapeDtypeStruct pytree
+    init(key, cfg)                     -> param pytree
+    forward(params, cfg, batch, ...)   -> (logits [B,S,V], aux_loss)
+    loss_fn(params, cfg, batch, ...)   -> scalar loss
+    init_cache_shape(cfg, B, max_len)  -> cache ShapeDtypeStruct pytree
+    init_cache(cfg, B, max_len)        -> cache pytree
+    prefill(params, cfg, batch, cache) -> (last logits [B,V], cache)
+    decode_step(params, cfg, batch, cache) -> (logits [B,V], cache)
+
+so the trainer / server / dry-run treat every architecture identically.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import transformer, whisper, xlstm, zamba2
+
+FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "audio": whisper,
+    "ssm": xlstm,
+    "hybrid": zamba2,
+}
+
+
+def get_model(cfg: ModelConfig):
+    try:
+        return FAMILY_MODULES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r}") from None
+
+
+def count_params(shapes: Dict[str, Any]) -> int:
+    return int(sum(np.prod(s.shape) for s in jax.tree.leaves(shapes)))
+
+
+def param_bytes(shapes: Dict[str, Any]) -> int:
+    return int(sum(np.prod(s.shape) * np.dtype(s.dtype).itemsize
+                   for s in jax.tree.leaves(shapes)))
+
+
+def model_flops_per_token(cfg: ModelConfig) -> float:
+    """The 6·N(_active)·D 'useful FLOPs' denominator for §Roofline."""
+    return 6.0 * cfg.active_param_count()
+
+
+def model_flops(cfg: ModelConfig, batch: int, seq: int, kind: str) -> float:
+    """MODEL_FLOPS for one step of the given shape cell.
+
+    train    : fwd + bwd = 3x the forward pass -> 6·N·D_tokens
+    prefill  : forward only -> 2·N·D_tokens
+    decode   : one token per sequence -> 2·N·B
+    """
+    n = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n * batch * seq
+    if kind == "prefill":
+        return 2.0 * n * batch * seq
+    if kind == "decode":
+        return 2.0 * n * batch
+    raise ValueError(kind)

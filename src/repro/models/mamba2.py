@@ -1,0 +1,228 @@
+"""Mamba2 (SSD — state-space duality) block, arXiv:2405.21060.
+
+Train/prefill use the chunked SSD algorithm: intra-chunk quadratic terms are
+dense matmuls (MXU-friendly), inter-chunk recurrence is a ``lax.scan`` over
+chunks.  Decode is the O(1) recurrent update on state [nh, P, N].
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def mamba_dims(cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    P = 64                                   # head dim
+    nh = di // P
+    N = cfg.ssm_state
+    g = cfg.ssm_groups
+    conv_ch = di + 2 * g * N
+    return d, di, P, nh, N, g, conv_ch
+
+
+def params_shape(cfg: ModelConfig, prefix_dims=()) -> Dict:
+    d, di, P, nh, N, g, conv_ch = mamba_dims(cfg)
+    dt = cfg.dtype
+    return {
+        "norm": L.shape_of((*prefix_dims, d), dt),
+        "in_proj": L.shape_of((*prefix_dims, d, 2 * di + 2 * g * N + nh), dt),
+        "conv_w": L.shape_of((*prefix_dims, cfg.conv_width, conv_ch), dt),
+        "conv_b": L.shape_of((*prefix_dims, conv_ch), dt),
+        "A_log": L.shape_of((*prefix_dims, nh), "float32"),
+        "D": L.shape_of((*prefix_dims, nh), "float32"),
+        "dt_bias": L.shape_of((*prefix_dims, nh), "float32"),
+        "gate_norm": L.shape_of((*prefix_dims, di), dt),
+        "out_proj": L.shape_of((*prefix_dims, di, d), dt),
+    }
+
+
+def params_init(key, cfg: ModelConfig, prefix_dims=()) -> Dict:
+    shapes = params_shape(cfg, prefix_dims)
+    keys = jax.random.split(key, len(shapes))
+    out = {}
+    for (name, s), k in zip(sorted(shapes.items()), keys):
+        if "norm" in name:
+            out[name] = jnp.zeros(s.shape, s.dtype)
+        elif name == "A_log":
+            out[name] = jnp.log(jnp.broadcast_to(
+                jnp.linspace(1.0, 16.0, s.shape[-1]), s.shape)).astype(s.dtype)
+        elif name == "D":
+            out[name] = jnp.ones(s.shape, s.dtype)
+        elif name == "dt_bias":
+            out[name] = jnp.full(s.shape, -2.0, s.dtype)
+        elif name == "conv_b":
+            out[name] = jnp.zeros(s.shape, s.dtype)
+        else:
+            out[name] = L.dense_init(k, s.shape, s.dtype)
+    return out
+
+
+def state_shape(cfg: ModelConfig, batch: int) -> Dict:
+    d, di, P, nh, N, g, conv_ch = mamba_dims(cfg)
+    return {
+        "ssm": L.shape_of((batch, nh, P, N), "float32"),
+        "conv": L.shape_of((batch, cfg.conv_width - 1, conv_ch), cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# projections / conv
+# ---------------------------------------------------------------------------
+
+
+def _project(x, lp, cfg: ModelConfig):
+    d, di, P, nh, N, g, conv_ch = mamba_dims(cfg)
+    zxbcdt = x @ lp["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + conv_ch]
+    dt_pre = zxbcdt[..., di + conv_ch:]
+    return z, xbc, dt_pre
+
+
+def _causal_conv(xbc, conv_w, conv_b, prev):
+    """Depthwise causal conv.  xbc: [B,S,C]; prev: [B,W-1,C] history."""
+    W = conv_w.shape[0]
+    xpad = jnp.concatenate([prev.astype(xbc.dtype), xbc], axis=1)
+    out = sum(
+        xpad[:, i:i + xbc.shape[1], :] * conv_w[i][None, None]
+        for i in range(W)
+    ) + conv_b[None, None]
+    new_prev = xpad[:, xpad.shape[1] - (W - 1):, :]
+    return jax.nn.silu(out), new_prev
+
+
+def _split_xbc(xbc, cfg: ModelConfig):
+    d, di, P, nh, N, g, conv_ch = mamba_dims(cfg)
+    xs = xbc[..., :di]
+    B = xbc[..., di:di + g * N]
+    C = xbc[..., di + g * N:]
+    xs = xs.reshape(*xs.shape[:-1], nh, P)
+    B = B.reshape(*B.shape[:-1], g, N)   # g == 1: broadcast over heads later
+    C = C.reshape(*C.shape[:-1], g, N)
+    return xs, B, C
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a):
+    """a: [..., T] -> [..., T, T] with out[i,j] = sum_{k=j+1..i} a_k (j<=i)."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(xs, dt, A, B, C, chunk: int, init_state=None):
+    """Chunked SSD.
+
+    xs: [b,S,nh,P]; dt: [b,S,nh] (post-softplus); A: [nh] (negative);
+    B,C: [b,S,g,N] with g==1 (broadcast over heads).
+    Returns (y [b,S,nh,P], final_state [b,nh,P,N]).
+    """
+    b, S, nh, P = xs.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    a = (dt * A[None, None, :]).astype(jnp.float32)       # log decay [b,S,nh]
+    xdt = (xs * dt[..., None]).astype(jnp.float32)
+
+    def csplit(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+
+    a_c, xdt_c = csplit(a), csplit(xdt)
+    B_c, C_c = csplit(B.astype(jnp.float32)), csplit(C.astype(jnp.float32))
+    B_c, C_c = B_c[..., 0, :], C_c[..., 0, :]             # g==1 -> [b,nc,cl,N]
+
+    seg = _segsum(a_c.transpose(0, 1, 3, 2))              # [b,nc,nh,cl,cl]
+    Ldec = jnp.exp(seg)
+    # intra-chunk: y_diag[i] = sum_{j<=i} (C_i.B_j) * decay(i,j) * xdt_j
+    CB = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)          # [b,nc,cl,cl]
+    M = CB[:, :, None] * Ldec                             # [b,nc,nh,i,j]
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", M, xdt_c)
+    # chunk-final states: S_c = sum_j decay(last,j) * B_j ⊗ xdt_j
+    cum = jnp.cumsum(a_c, axis=2)                         # [b,nc,cl,nh]
+    dec_last = jnp.exp(cum[:, :, -1:, :] - cum)           # [b,nc,cl,nh]
+    S_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", dec_last, B_c, xdt_c)
+    # inter-chunk recurrence
+    a_tot = cum[:, :, -1, :]                              # [b,nc,nh]
+    h0 = (jnp.zeros((b, nh, P, N), jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+
+    def step(h, xs_):
+        S_c, at = xs_
+        h_new = h * jnp.exp(at)[:, :, None, None] + S_c
+        return h_new, h
+
+    hN, h_prev = jax.lax.scan(
+        step, h0, (S_chunk.swapaxes(0, 1), a_tot.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                        # [b,nc,nh,P,N]
+    # off-chunk contribution: y_off[i] = decay(i, chunk start) * C_i . h_prev
+    dec_in = jnp.exp(cum)                                 # decay start->i
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", C_c, dec_in, h_prev)
+    y = (y_diag + y_off).reshape(b, S, nh, P)
+    return y, hN
+
+
+def ssd_step(x, dt, A, B, C, state):
+    """Recurrent SSD step.  x:[b,nh,P], dt:[b,nh], B,C:[b,N] (g==1)."""
+    a = jnp.exp((dt * A[None]).astype(jnp.float32))       # [b,nh]
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+    new = state * a[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xdt, B.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", new, C.astype(jnp.float32))
+    return y, new
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+
+def block_forward(x, lp, cfg: ModelConfig, state=None, chunk=None):
+    """Full-sequence Mamba2 block.  Returns (y, new_state dict)."""
+    d, di, P, nh, N, g, conv_ch = mamba_dims(cfg)
+    B_, S = x.shape[:2]
+    h = L.rmsnorm(x, lp["norm"], cfg.norm_eps)
+    z, xbc, dt_pre = _project(h, lp, cfg)
+    prev = (jnp.zeros((B_, cfg.conv_width - 1, conv_ch), x.dtype)
+            if state is None else state["conv"])
+    xbc, new_conv = _causal_conv(xbc, lp["conv_w"], lp["conv_b"], prev)
+    xs, Bc, Cc = _split_xbc(xbc, cfg)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+    init = None if state is None else state["ssm"]
+    ck = chunk or min(cfg.ssm_chunk, S)
+    y, hN = ssd_chunked(xs, dt, A, Bc, Cc, ck, init)
+    y = y + xs.astype(jnp.float32) * lp["D"][None, None, :, None]
+    y = y.reshape(B_, S, di).astype(x.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+    out = x + y @ lp["out_proj"]
+    return out, {"ssm": hN, "conv": new_conv}
+
+
+def block_step(x, lp, cfg: ModelConfig, state):
+    """Single-token Mamba2 block.  x: [B,1,d]."""
+    d, di, P, nh, N, g, conv_ch = mamba_dims(cfg)
+    B_ = x.shape[0]
+    h = L.rmsnorm(x, lp["norm"], cfg.norm_eps)
+    z, xbc, dt_pre = _project(h, lp, cfg)
+    xbc, new_conv = _causal_conv(xbc, lp["conv_w"], lp["conv_b"], state["conv"])
+    xs, Bc, Cc = _split_xbc(xbc, cfg)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+    y, new_ssm = ssd_step(xs[:, 0], dt[:, 0], A, Bc[:, 0, 0], Cc[:, 0, 0],
+                          state["ssm"])
+    y = y + xs[:, 0].astype(jnp.float32) * lp["D"][None, :, None]
+    y = y.reshape(B_, 1, di).astype(x.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+    return x + y @ lp["out_proj"], {"ssm": new_ssm, "conv": new_conv}

@@ -1,0 +1,267 @@
+"""Decoder-only GQA transformer: dense, MoE and VLM-backbone families.
+
+Layers are stacked ([L, ...] leading dim) and iterated with ``lax.scan`` so
+the lowered HLO stays compact for 80+ layer configs; each block is wrapped in
+``jax.checkpoint`` according to ``cfg.remat``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def init_shape(cfg: ModelConfig) -> Dict:
+    Ln, d, v = cfg.n_layers, cfg.d_model, cfg.vocab_size
+    dt = cfg.dtype
+    layer = {
+        "attn": L.attn_params_shape(cfg, prefix_dims=(Ln,)),
+        "attn_norm": L.shape_of((Ln, d), dt),
+        "mlp_norm": L.shape_of((Ln, d), dt),
+    }
+    if cfg.moe is not None:
+        layer["moe"] = moe_lib.moe_params_shape(cfg, prefix_dims=(Ln,))
+    else:
+        layer["mlp"] = L.mlp_params_shape(cfg, prefix_dims=(Ln,))
+    out = {
+        "layers": layer,
+        "final_norm": L.shape_of((d,), dt),
+    }
+    if not (cfg.tie_embeddings and cfg.uses_tokens):
+        out["lm_head"] = L.shape_of((d, v), dt)
+    if cfg.uses_tokens:
+        out["embed"] = L.shape_of((v, d), dt)
+    return out
+
+
+def _lm_head(params, cfg: ModelConfig):
+    if "lm_head" in params:
+        return params["lm_head"]
+    return params["embed"].T            # tied embeddings (e.g. phi4-mini)
+
+
+def init(key, cfg: ModelConfig) -> Dict:
+    shapes = init_shape(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for (path, s), k in zip(flat, keys):
+        name = jax.tree_util.keystr(path)
+        if "norm" in name:
+            leaves.append(jnp.zeros(s.shape, s.dtype))
+        elif "embed" in name:
+            leaves.append(
+                (jax.random.normal(k, s.shape, jnp.float32) * 0.02).astype(s.dtype))
+        else:
+            leaves.append(L.dense_init(k, s.shape, s.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _block(x, lp, positions, cfg: ModelConfig, moe_impl: str, positions_3d=None):
+    h = L.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    h = L.multihead_attention(
+        lp["attn"], h, positions, cfg, causal=True,
+        positions_3d=positions_3d, window=cfg.attn_window)
+    x = constrain(x + h, "batch", "seq", "embed")
+    h = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.moe is not None:
+        h, aux = moe_lib.moe_apply(lp["moe"], h, cfg, moe_impl)
+    else:
+        h, aux = L.mlp_apply(lp["mlp"], h, cfg.activation), jnp.zeros((), jnp.float32)
+    x = constrain(x + h, "batch", "seq", "embed")
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg: ModelConfig, batch: Dict):
+    if cfg.uses_tokens:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    else:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    return constrain(x, "batch", "seq", "embed")
+
+
+def forward(params, cfg: ModelConfig, batch: Dict, moe_impl: str = "sort"):
+    """Full-sequence forward -> (logits [B,S,V], aux_loss)."""
+    x = embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    positions_3d = batch.get("positions_3d")
+    if cfg.rope_type == "mrope" and positions_3d is None:
+        positions_3d = jnp.broadcast_to(positions[None], (3, B, S))
+
+    def body(carry, lp):
+        x = carry
+        x, aux = _block(x, lp, positions, cfg, moe_impl, positions_3d)
+        return x, aux
+
+    x, auxs = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ _lm_head(params, cfg)
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, jnp.sum(auxs)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict, moe_impl: str = "sort",
+            aux_weight: float = 0.01):
+    logits, aux = forward(params, cfg, batch, moe_impl)
+    return token_cross_entropy(logits, batch["labels"]) + aux_weight * aux
+
+
+def token_cross_entropy(logits, labels):
+    """Mean CE over positions with label >= 0 (fp32 accumulation)."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - tgt) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache_shape(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    Ln, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": L.shape_of((Ln, batch, max_len, kv, hd), cfg.dtype),
+        "v": L.shape_of((Ln, batch, max_len, kv, hd), cfg.dtype),
+        "pos": L.shape_of((), "int32"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    shapes = init_cache_shape(cfg, batch, max_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def cache_spec_logical():
+    return {
+        "k": (None, "batch", "kv_seq", None, "head_dim"),
+        "v": (None, "batch", "kv_seq", None, "head_dim"),
+        "pos": (),
+    }
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict, cache: Dict,
+            moe_impl: str = "sort"):
+    """Run the prompt through the model, filling the cache.
+
+    Returns (last-position logits [B, V], cache).
+    """
+    x = embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    positions_3d = None
+    if cfg.rope_type == "mrope":
+        positions_3d = batch.get("positions_3d")
+        if positions_3d is None:
+            positions_3d = jnp.broadcast_to(positions[None], (3, B, S))
+    hd = cfg.resolved_head_dim
+
+    def body(x, lp):
+        h = L.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        kv_in = h
+        k = L._split_heads(kv_in @ lp["attn"]["wk"], cfg.n_kv_heads, hd)
+        v = L._split_heads(kv_in @ lp["attn"]["wv"], cfg.n_kv_heads, hd)
+        if cfg.rope_type == "mrope":
+            k_r = L.apply_mrope(k, positions_3d, cfg.rope_theta, cfg.mrope_sections)
+        elif cfg.rope_type == "rope":
+            k_r = L.apply_rope(k, positions, cfg.rope_theta)
+        else:
+            k_r = k
+        a = L.multihead_attention(
+            lp["attn"], h, positions, cfg, causal=True,
+            positions_3d=positions_3d, window=cfg.attn_window)
+        x = constrain(x + a, "batch", "seq", "embed")
+        h = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.moe is not None:
+            h, _ = moe_lib.moe_apply(lp["moe"], h, cfg, moe_impl)
+        else:
+            h = L.mlp_apply(lp["mlp"], h, cfg.activation)
+        x = constrain(x + h, "batch", "seq", "embed")
+        return x, (k_r, v)
+
+    x, (ks, vs) = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+    # ks/vs: [L, B, S, kv, hd] -> write into cache[:, :, :S]
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], ks.astype(cache["k"].dtype), 0, axis=2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], vs.astype(cache["v"].dtype), 0, axis=2)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    x = L.rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = (x @ _lm_head(params, cfg))[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, batch: Dict, cache: Dict,
+                moe_impl: str = "sort"):
+    """One-token decode.  batch: {"tokens": [B,1]} (or {"embeds": [B,1,D]}).
+
+    Returns (logits [B, V], cache).
+    """
+    x = embed_inputs(params, cfg, batch)
+    B = x.shape[0]
+    index = cache["pos"]
+    positions_3d = None
+    if cfg.rope_type == "mrope":
+        positions_3d = jnp.broadcast_to(
+            jnp.full((B, 1), index, dtype=jnp.int32)[None], (3, B, 1))
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        h = L.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        a, ck, cv = L.cached_attention_step(
+            lp["attn"], h, ck, cv, index, cfg,
+            window=cfg.attn_window, positions_3d=positions_3d)
+        x = x + a
+        h = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.moe is not None:
+            # decode: route the whole batch as one group ([B,1,D] -> [1,B,D])
+            hg = jnp.swapaxes(h, 0, 1)
+            hg, _ = moe_lib.moe_apply(lp["moe"], hg, cfg, moe_impl)
+            h = jnp.swapaxes(hg, 0, 1)
+        else:
+            h = L.mlp_apply(lp["mlp"], h, cfg.activation)
+        return x + h, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    cache = {"k": ck, "v": cv, "pos": index + 1}
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ _lm_head(params, cfg))[:, 0]
+    return logits, cache

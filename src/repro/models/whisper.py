@@ -1,0 +1,225 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv/mel audio frontend is a STUB per the assignment brief:
+``input_specs()`` supplies precomputed frame embeddings [B, T_enc, d_model].
+Positions are sinusoidal (whisper uses sinusoidal encoder positions; we use
+them on the decoder too instead of a learned 448-entry table so the assigned
+32k decoder shapes are representable — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.transformer import token_cross_entropy
+
+
+def _enc_layers(cfg: ModelConfig) -> int:
+    return cfg.encoder_layers or cfg.n_layers
+
+
+def init_shape(cfg: ModelConfig) -> Dict:
+    Le, Ld, d, v = _enc_layers(cfg), cfg.n_layers, cfg.d_model, cfg.vocab_size
+    dt = cfg.dtype
+
+    def norm(*pre):
+        return {"w": L.shape_of((*pre, d), dt), "b": L.shape_of((*pre, d), dt)}
+
+    enc = {
+        "attn": L.attn_params_shape(cfg, prefix_dims=(Le,)),
+        "attn_norm": norm(Le),
+        "mlp": L.mlp_params_shape(cfg, prefix_dims=(Le,)),
+        "mlp_norm": norm(Le),
+    }
+    dec = {
+        "self_attn": L.attn_params_shape(cfg, prefix_dims=(Ld,)),
+        "self_norm": norm(Ld),
+        "cross_attn": L.attn_params_shape(cfg, prefix_dims=(Ld,)),
+        "cross_norm": norm(Ld),
+        "mlp": L.mlp_params_shape(cfg, prefix_dims=(Ld,)),
+        "mlp_norm": norm(Ld),
+    }
+    return {
+        "embed": L.shape_of((v, d), dt),
+        "encoder": enc,
+        "decoder": dec,
+        "enc_final_norm": norm(),
+        "dec_final_norm": norm(),
+        "lm_head": L.shape_of((d, v), dt),
+    }
+
+
+def init(key, cfg: ModelConfig) -> Dict:
+    shapes = init_shape(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for (path, s), k in zip(flat, keys):
+        name = jax.tree_util.keystr(path)
+        if "norm" in name:
+            leaves.append(jnp.ones(s.shape, s.dtype) if name.endswith("['w']")
+                          else jnp.zeros(s.shape, s.dtype))
+        elif "embed" in name:
+            leaves.append((jax.random.normal(k, s.shape, jnp.float32) * 0.02
+                           ).astype(s.dtype))
+        else:
+            leaves.append(L.dense_init(k, s.shape, s.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _ln(x, p, eps):
+    return L.layernorm(x, p["w"], p["b"], eps)
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: [B, T, d] -> encoder output [B, T, d]."""
+    B, T, d = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype)) + L.sinusoidal_positions(T, d)[None].astype(cfg.dtype)
+    x = constrain(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(x, lp):
+        h = _ln(x, lp["attn_norm"], cfg.norm_eps)
+        h = L.multihead_attention(lp["attn"], h, positions, cfg,
+                                  causal=False, use_rope=False)
+        x = constrain(x + h, "batch", "seq", "embed")
+        h = _ln(x, lp["mlp_norm"], cfg.norm_eps)
+        h = L.mlp_apply(lp["mlp"], h, cfg.activation)
+        x = constrain(x + h, "batch", "seq", "embed")
+        return x, None
+
+    body = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return _ln(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _decoder_pass(params, cfg: ModelConfig, tokens, enc_out, collect_kv=False):
+    B, S = tokens.shape
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + L.sinusoidal_positions(S, d)[None].astype(x.dtype)
+    x = constrain(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, lp):
+        h = _ln(x, lp["self_norm"], cfg.norm_eps)
+        k = L._split_heads(h @ lp["self_attn"]["wk"], cfg.n_kv_heads, hd)
+        v = L._split_heads(h @ lp["self_attn"]["wv"], cfg.n_kv_heads, hd)
+        a = L.multihead_attention(lp["self_attn"], h, positions, cfg,
+                                  causal=True, use_rope=False)
+        x = constrain(x + a, "batch", "seq", "embed")
+        h = _ln(x, lp["cross_norm"], cfg.norm_eps)
+        a = L.multihead_attention(lp["cross_attn"], h, positions, cfg,
+                                  causal=False, kv_x=enc_out, use_rope=False)
+        x = constrain(x + a, "batch", "seq", "embed")
+        h = _ln(x, lp["mlp_norm"], cfg.norm_eps)
+        h = L.mlp_apply(lp["mlp"], h, cfg.activation)
+        x = constrain(x + h, "batch", "seq", "embed")
+        return x, (k, v) if collect_kv else None
+
+    body = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, ys = jax.lax.scan(body, x, params["decoder"])
+    x = _ln(x, params["dec_final_norm"], cfg.norm_eps)
+    return x, ys
+
+
+def forward(params, cfg: ModelConfig, batch: Dict, moe_impl: str = "sort"):
+    enc_out = encode(params, cfg, batch["frames"])
+    x, _ = _decoder_pass(params, cfg, batch["tokens"], enc_out)
+    logits = x @ params["lm_head"]
+    return constrain(logits, "batch", None, "vocab"), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch, moe_impl: str = "sort", aux_weight: float = 0.0):
+    logits, _ = forward(params, cfg, batch)
+    return token_cross_entropy(logits, batch["labels"])
+
+
+def init_cache_shape(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    Ld, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    T = cfg.encoder_seq
+    return {
+        "k": L.shape_of((Ld, batch, max_len, kv, hd), cfg.dtype),
+        "v": L.shape_of((Ld, batch, max_len, kv, hd), cfg.dtype),
+        "cross_k": L.shape_of((Ld, batch, T, kv, hd), cfg.dtype),
+        "cross_v": L.shape_of((Ld, batch, T, kv, hd), cfg.dtype),
+        "pos": L.shape_of((), "int32"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_cache_shape(cfg, batch, max_len))
+
+
+def _cross_kv(params, cfg: ModelConfig, enc_out):
+    hd = cfg.resolved_head_dim
+
+    def per_layer(lp):
+        k = L._split_heads(enc_out @ lp["cross_attn"]["wk"], cfg.n_kv_heads, hd)
+        v = L._split_heads(enc_out @ lp["cross_attn"]["wv"], cfg.n_kv_heads, hd)
+        return k, v
+
+    ks, vs = jax.vmap(per_layer)(params["decoder"])
+    return ks, vs
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict, cache: Dict,
+            moe_impl: str = "sort"):
+    """batch: {"frames": [B,T,d], "tokens": [B,S]}."""
+    enc_out = encode(params, cfg, batch["frames"])
+    S = batch["tokens"].shape[1]
+    x, ys = _decoder_pass(params, cfg, batch["tokens"], enc_out, collect_kv=True)
+    ks, vs = ys
+    cross_k, cross_v = _cross_kv(params, cfg, enc_out)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], ks.astype(cache["k"].dtype), 0, axis=2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], vs.astype(cache["v"].dtype), 0, axis=2)
+    cache["cross_k"] = cross_k.astype(cache["cross_k"].dtype)
+    cache["cross_v"] = cross_v.astype(cache["cross_v"].dtype)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    logits = (x[:, -1:] @ params["lm_head"])[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, batch: Dict, cache: Dict,
+                moe_impl: str = "sort"):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)   # [B,1,d]
+    index = cache["pos"]
+    d = cfg.d_model
+    # sinusoidal position of the current index
+    half = d // 2
+    freqs = jnp.exp(jnp.arange(half, dtype=jnp.float32)
+                    * (-jnp.log(10000.0) / half))
+    ang = index.astype(jnp.float32) * freqs
+    pe = jnp.stack([jnp.sin(ang), jnp.cos(ang)], axis=1).reshape(-1)[:d]
+    x = x + pe[None, None].astype(x.dtype)
+
+    def body(x, xs):
+        lp, ck, cv, xk, xv = xs
+        h = _ln(x, lp["self_norm"], cfg.norm_eps)
+        a, ck, cv = L.cached_attention_step(lp["self_attn"], h, ck, cv, index,
+                                            cfg)  # cfg.rope_type == "none"
+        x = x + a
+        h = _ln(x, lp["cross_norm"], cfg.norm_eps)
+        a = L.cached_cross_attention_step(lp["cross_attn"], h, xk, xv, cfg)
+        x = x + a
+        h = _ln(x, lp["mlp_norm"], cfg.norm_eps)
+        h = L.mlp_apply(lp["mlp"], h, cfg.activation)
+        return x + h, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(
+        body, x, (params["decoder"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    cache = dict(cache)
+    cache["k"], cache["v"], cache["pos"] = ck, cv, index + 1
+    x = _ln(x, params["dec_final_norm"], cfg.norm_eps)
+    return (x @ params["lm_head"])[:, 0], cache

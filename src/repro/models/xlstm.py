@@ -1,0 +1,418 @@
+"""xLSTM (sLSTM + mLSTM blocks), arXiv:2405.04517.
+
+Block pattern is ``xLSTM[7:1]`` — groups of 7 mLSTM blocks followed by one
+sLSTM block (``cfg.slstm_every = 8``).  Parameters are stacked per group so
+``lax.scan`` over groups keeps the HLO compact.
+
+mLSTM: matrix-memory cell with exponential gating.
+  * train/prefill — parallel stabilized form (quadratic intra-sequence, like
+    attention) + closed-form final state, so prefill is MXU-friendly.
+  * decode — recurrent form, O(1) state per token: C [nh, dk, dv], n [nh, dk],
+    m [nh].  No KV cache; `long_500k` costs the same per token as `decode_32k`
+    (the point of running recurrent archs in that cell).
+
+sLSTM: scalar-memory cell with block-diagonal hidden recurrence; inherently
+sequential -> ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.transformer import token_cross_entropy
+
+# ---------------------------------------------------------------------------
+# parameter shapes
+# ---------------------------------------------------------------------------
+
+
+def _dims(cfg: ModelConfig):
+    d = cfg.d_model
+    di = 2 * d                       # mLSTM expansion factor 2
+    nh = cfg.n_heads
+    dh = di // nh                    # mLSTM head dim
+    return d, di, nh, dh
+
+
+def _groups(cfg: ModelConfig):
+    every = cfg.slstm_every or cfg.n_layers
+    assert cfg.n_layers % every == 0, (cfg.n_layers, every)
+    return cfg.n_layers // every, every - 1   # (n_groups, mlstm per group)
+
+
+def init_shape(cfg: ModelConfig) -> Dict:
+    d, di, nh, dh = _dims(cfg)
+    G, M = _groups(cfg)
+    dt = cfg.dtype
+    sd = d                           # sLSTM inner dim (no expansion)
+    sh = sd // nh
+    f = int(sd * 4 / 3 // 64 * 64) or 64  # sLSTM post-FFN hidden
+    mlstm = {
+        "norm": L.shape_of((G, M, d), dt),
+        "w_up": L.shape_of((G, M, d, 2 * di), dt),      # [x | ogate]
+        "wq": L.shape_of((G, M, di, di), dt),
+        "wk": L.shape_of((G, M, di, di), dt),
+        "wv": L.shape_of((G, M, di, di), dt),
+        "w_if": L.shape_of((G, M, di, 2 * nh), dt),     # i & f gate preacts
+        "b_if": L.shape_of((G, M, 2 * nh), "float32"),
+        "out_norm": L.shape_of((G, M, di), dt),
+        "w_down": L.shape_of((G, M, di, d), dt),
+    }
+    slstm = {
+        "norm": L.shape_of((G, d), dt),
+        "w_in": L.shape_of((G, d, 4 * sd), dt),         # i f z o
+        "r_h": L.shape_of((G, nh, sh, 4 * sh), dt),     # block-diag recurrence
+        "bias": L.shape_of((G, 4 * sd), "float32"),
+        "out_norm": L.shape_of((G, sd), dt),
+        "ffn_norm": L.shape_of((G, d), dt),
+        "ffn_gate": L.shape_of((G, d, f), dt),
+        "ffn_up": L.shape_of((G, d, f), dt),
+        "ffn_down": L.shape_of((G, f, d), dt),
+    }
+    return {
+        "embed": L.shape_of((cfg.vocab_size, d), dt),
+        "mlstm": mlstm,
+        "slstm": slstm,
+        "final_norm": L.shape_of((d,), dt),
+        "lm_head": L.shape_of((d, cfg.vocab_size), dt),
+    }
+
+
+def init(key, cfg: ModelConfig) -> Dict:
+    shapes = init_shape(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for (path, s), k in zip(flat, keys):
+        name = jax.tree_util.keystr(path)
+        if "norm" in name:
+            leaves.append(jnp.zeros(s.shape, s.dtype))
+        elif "b_if" in name or "bias" in name:
+            # forget-gate bias init high -> long memory at init
+            leaves.append(jnp.ones(s.shape, s.dtype))
+        elif "embed" in name:
+            leaves.append((jax.random.normal(k, s.shape, jnp.float32) * 0.02).astype(s.dtype))
+        else:
+            leaves.append(L.dense_init(k, s.shape, s.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_gates(x, lp):
+    """Returns (q, k, v, log_f, i_pre). x: [B,S,di]."""
+    nh2 = lp["b_if"].shape[-1]
+    nh = nh2 // 2
+    di = x.shape[-1]
+    dh = di // nh
+    q = (x @ lp["wq"]).reshape(*x.shape[:-1], nh, dh)
+    k = (x @ lp["wk"]).reshape(*x.shape[:-1], nh, dh) / math.sqrt(dh)
+    v = (x @ lp["wv"]).reshape(*x.shape[:-1], nh, dh)
+    pre = (x @ lp["w_if"]).astype(jnp.float32) + lp["b_if"]
+    i_pre, f_pre = pre[..., :nh], pre[..., nh:]
+    log_f = -jax.nn.softplus(-f_pre)          # log sigmoid
+    return q, k, v, log_f, i_pre
+
+
+def mlstm_parallel(x, lp):
+    """Parallel stabilized mLSTM.  x: [B,S,di] -> (y [B,S,di], state)."""
+    q, k, v, log_f, i_pre = _mlstm_gates(x, lp)
+    # §Perf cell A iteration 3: keep q/k/v seq-sharded, feature-replicated.
+    # Without this GSPMD leaves dh sharded from the column-parallel wq/wk
+    # and the q·k einsum contracts a sharded dim -> psum of the [S,S]
+    # scores (169 GB/chip/step measured).  Gathering q/k/v (34 GB) is 5×
+    # cheaper; scores then stay seq-sharded with no reduction.
+    q = constrain(q, "batch", "seq", None, None)
+    k = constrain(k, "batch", "seq", None, None)
+    v = constrain(v, "batch", "seq", None, None)
+    B, S, nh, dh = q.shape
+    cum = jnp.cumsum(log_f, axis=1)                       # [B,S,nh]
+    # D[b,h,i,j] = cum_i - cum_j + ipre_j   (j <= i)
+    D = (cum[:, :, None, :] - cum[:, None, :, :]).transpose(0, 3, 1, 2) \
+        + i_pre.transpose(0, 2, 1)[:, :, None, :]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    D = jnp.where(mask[None, None], D, -jnp.inf)
+    m = jnp.max(D, axis=-1)                               # [B,nh,S]
+    Dp = jnp.exp(D - m[..., None])
+    # §Perf cell A iteration 4: keep q/k/v (and their cotangents) in bf16
+    # across the seq-parallel gathers/reductions — preferred_element_type
+    # gives fp32 accumulation while halving every collective payload.
+    scores = jnp.einsum("bihd,bjhd->bhij", q, k,
+                        preferred_element_type=jnp.float32) * Dp
+    norm = jnp.maximum(jnp.abs(scores.sum(-1)), jnp.exp(-m))  # [B,nh,S]
+    y = jnp.einsum("bhij,bjhd->bihd", scores.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    y = y / norm.swapaxes(1, 2)[..., None]
+    # closed-form final state
+    m_S = jnp.maximum(jnp.max(cum[:, -1, None, :] - cum + i_pre, axis=1),
+                      jnp.zeros_like(cum[:, -1]))         # [B,nh] (>=0 for n)
+    w = jnp.exp(cum[:, -1, None, :] - cum + i_pre - m_S[:, None, :])  # [B,S,nh]
+    C = jnp.einsum("bshd,bsh,bshe->bhde", k, w, v)
+    n = jnp.einsum("bshd,bsh->bhd", k, w)
+    state = {"C": C, "n": n, "m": m_S}
+    return y.reshape(B, S, nh * dh), state
+
+
+def mlstm_chunked(x, lp, chunk: int, init_state=None):
+    """Chunkwise-parallel stabilized mLSTM (§Perf cell A optimization).
+
+    The full parallel form materializes the [B,nh,S,S] decay matrix — O(S²)
+    HBM traffic that makes xlstm train_4k the worst roofline cell.  Chunking
+    (the xLSTM paper's own kernel strategy, same shape as Mamba2's SSD)
+    computes a [c,c] intra-chunk block per step and carries the (C,n,m)
+    recurrent state between chunks: traffic drops from O(S²) to O(S·c).
+
+    x: [B,S,di] -> (y [B,S,di], final state).  Exact (up to fp assoc.) match
+    with mlstm_parallel; tested in test_models_xlstm_chunked.
+    """
+    q, k, v, log_f, i_pre = _mlstm_gates(x, lp)
+    B, S, nh, dh = q.shape
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    c = chunk
+
+    def resh(t):
+        return t.reshape(B, nc, c, *t.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = resh(q), resh(k), resh(v)          # [nc,B,c,nh,dh]
+    lfs, ips = resh(log_f), resh(i_pre)             # [nc,B,c,nh]
+
+    if init_state is None:
+        C0 = jnp.zeros((B, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, nh, dh), jnp.float32)
+        m0 = jnp.full((B, nh), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = (init_state["C"], init_state["n"], init_state["m"])
+
+    def step(carry, xs):
+        C_prev, n_prev, m_prev = carry
+        qc, kc, vc, lf, ip = xs
+        cum = jnp.cumsum(lf, axis=1)                         # [B,c,nh]
+        # intra-chunk decay D[b,h,i,j] = cum_i - cum_j + ip_j (j <= i)
+        D = (cum[:, :, None, :] - cum[:, None, :, :]).transpose(0, 3, 1, 2) \
+            + ip.transpose(0, 2, 1)[:, :, None, :]
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        D = jnp.where(mask[None, None], D, -jnp.inf)
+        m_intra = jnp.max(D, axis=-1)                        # [B,nh,c]
+        # inter-chunk path: decay from state through position i
+        g = (cum + m_prev[:, None, :]).transpose(0, 2, 1)    # [B,nh,c]
+        m_i = jnp.maximum(m_intra, g)                        # stabilizer
+        Dp = jnp.exp(D - m_i[..., None])
+        scores = jnp.einsum("bihd,bjhd->bhij", qc, kc) * Dp
+        w_state = jnp.exp(g - m_i)                           # [B,nh,c]
+        qh = qc.transpose(0, 2, 1, 3)                        # [B,nh,c,dh]
+        inter_num = jnp.einsum("bhcd,bhde->bhce",
+                               qh.astype(jnp.float32), C_prev)
+        inter_den = jnp.einsum("bhcd,bhd->bhc",
+                               qh.astype(jnp.float32), n_prev)
+        num = jnp.einsum("bhij,bjhd->bhid", scores, vc).astype(jnp.float32) \
+            + inter_num * w_state[..., None]
+        den = scores.sum(-1).astype(jnp.float32) + inter_den * w_state
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_i))
+        y = (num / den[..., None]).swapaxes(1, 2)            # [B,c,nh,dh]
+        # state update across the whole chunk
+        F = cum[:, -1]                                       # [B,nh]
+        decay_j = (F[:, None, :] - cum + ip)                 # [B,c,nh]
+        m_new = jnp.maximum(F + m_prev, jnp.max(decay_j, axis=1))
+        wj = jnp.exp(decay_j - m_new[:, None, :])            # [B,c,nh]
+        a = jnp.exp(F + m_prev - m_new)
+        C_new = C_prev * a[..., None, None] + jnp.einsum(
+            "bchd,bch,bche->bhde", kc, wj, vc).astype(jnp.float32)
+        n_new = n_prev * a[..., None] + jnp.einsum(
+            "bchd,bch->bhd", kc, wj).astype(jnp.float32)
+        return (C_new, n_new, m_new), y.astype(x.dtype)
+
+    (C, n, m), ys = jax.lax.scan(step, (C0, n0, m0), (qs, ks, vs, lfs, ips))
+    y = ys.swapaxes(0, 1).reshape(B, S, nh * dh)
+    return y, {"C": C, "n": n, "m": m}
+
+
+def mlstm_step(x, lp, state):
+    """Recurrent mLSTM step.  x: [B,1,di]."""
+    q, k, v, log_f, i_pre = _mlstm_gates(x, lp)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                  # [B,nh,dh]
+    log_f, i_pre = log_f[:, 0], i_pre[:, 0]              # [B,nh]
+    m_prev, C_prev, n_prev = state["m"], state["C"], state["n"]
+    m_new = jnp.maximum(log_f + m_prev, i_pre)
+    a = jnp.exp(log_f + m_prev - m_new)[..., None]
+    b = jnp.exp(i_pre - m_new)[..., None]
+    C = C_prev * a[..., None] + b[..., None] * k[..., :, None] * v[..., None, :]
+    n = n_prev * a + b * k
+    h_num = jnp.einsum("bhde,bhd->bhe", C, q)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), jnp.exp(-m_new))
+    y = (h_num / h_den[..., None]).reshape(x.shape[0], 1, -1)
+    return y.astype(x.dtype), {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_block(x, lp, cfg, mode, state=None):
+    """Full mLSTM block: norm -> up-proj -> cell -> gated out -> down-proj."""
+    d, di, nh, dh = _dims(cfg)
+    h = L.rmsnorm(x, lp["norm"], cfg.norm_eps)
+    up = h @ lp["w_up"]
+    inner, ogate = up[..., :di], up[..., di:]
+    if mode == "parallel":
+        c = cfg.mlstm_chunk
+        if c and inner.shape[1] % c == 0 and inner.shape[1] > c:
+            y, new_state = mlstm_chunked(inner, lp, c)
+        else:
+            y, new_state = mlstm_parallel(inner, lp)
+    else:
+        y, new_state = mlstm_step(inner, lp, state)
+    y = L.rmsnorm(y.astype(x.dtype), lp["out_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(ogate)
+    return x + y @ lp["w_down"], new_state
+
+
+def mlstm_state_shape(cfg: ModelConfig, batch: int):
+    d, di, nh, dh = _dims(cfg)
+    return {
+        "C": L.shape_of((batch, nh, dh, dh), "float32"),
+        "n": L.shape_of((batch, nh, dh), "float32"),
+        "m": L.shape_of((batch, nh), "float32"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell
+# ---------------------------------------------------------------------------
+
+
+def slstm_scan(x, lp, cfg, state):
+    """Sequential sLSTM over time.  x: [B,S,d]."""
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    sh = d // nh
+    pre_in = (x @ lp["w_in"]).astype(jnp.float32) + lp["bias"]   # [B,S,4d]
+    # §Perf cell A iteration 4: the time scan slices pre_in per step; with
+    # pre_in seq-sharded every step needs a collective-permute (26 GB/chip
+    # measured).  Gather the whole buffer once instead.
+    pre_in = constrain(pre_in, "batch", None, None)
+
+    def step(carry, pre_t):
+        h, c, n, m = carry
+        hh = h.reshape(B, nh, sh)
+        rec = jnp.einsum("bhs,hst->bht", hh, lp["r_h"].astype(jnp.float32))
+        pre = pre_t + rec.reshape(B, 4 * d)
+        i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+        log_f = -jax.nn.softplus(-f_pre)
+        m_new = jnp.maximum(log_f + m, i_pre)
+        i_g = jnp.exp(i_pre - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        c_new = f_g * c + i_g * jnp.tanh(z_pre)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1.0)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    carry, ys = jax.lax.scan(step, state, pre_in.swapaxes(0, 1))
+    return ys.swapaxes(0, 1).astype(x.dtype), carry
+
+
+def slstm_block(x, lp, cfg, state):
+    h = L.rmsnorm(x, lp["norm"], cfg.norm_eps)
+    y, new_state = slstm_scan(h, lp, cfg, state)
+    y = L.rmsnorm(y, lp["out_norm"], cfg.norm_eps)
+    x = x + y
+    h = L.rmsnorm(x, lp["ffn_norm"], cfg.norm_eps)
+    h = jax.nn.silu(h @ lp["ffn_gate"]) * (h @ lp["ffn_up"])
+    return x + h @ lp["ffn_down"], new_state
+
+
+def slstm_state_shape(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    s = L.shape_of((batch, d), "float32")
+    return (s, s, s, s)
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+
+
+def init_cache_shape(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    G, M = _groups(cfg)
+
+    def stack(tree, *dims):
+        return jax.tree.map(
+            lambda s: L.shape_of((*dims, *s.shape), s.dtype), tree)
+
+    return {
+        "mlstm": stack(mlstm_state_shape(cfg, batch), G, M),
+        "slstm": stack(slstm_state_shape(cfg, batch), G),
+        "pos": L.shape_of((), "int32"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_cache_shape(cfg, batch, max_len))
+
+
+def _run(params, cfg: ModelConfig, x, cache, mode: str):
+    """Scan over groups of (M mLSTM blocks + 1 sLSTM block)."""
+    G, M = _groups(cfg)
+
+    def group_body(x, xs):
+        mp, sp, mstate, sstate = xs
+
+        def inner(x, ys):
+            lp, st = ys
+            x, new_st = mlstm_block(x, lp, cfg, mode, st)
+            x = constrain(x, "batch", "seq", "embed")
+            return x, new_st
+
+        x, new_mstate = jax.lax.scan(inner, x, (mp, mstate))
+        x, new_sstate = slstm_block(x, sp, cfg, sstate)
+        x = constrain(x, "batch", "seq", "embed")
+        return x, (new_mstate, new_sstate)
+
+    body = group_body
+    if cfg.remat != "none" and mode == "parallel":
+        body = jax.checkpoint(group_body)
+    x, (mstates, sstates) = jax.lax.scan(
+        body, x, (params["mlstm"], params["slstm"],
+                  cache["mlstm"], cache["slstm"]))
+    return x, {"mlstm": mstates, "slstm": sstates, "pos": cache["pos"]}
+
+
+def forward(params, cfg: ModelConfig, batch: Dict, moe_impl: str = "sort"):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = constrain(x, "batch", "seq", "embed")
+    B, S = batch["tokens"].shape
+    cache = init_cache(cfg, B, 0)
+    x, _ = _run(params, cfg, x, cache, "parallel")
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return constrain(logits, "batch", None, "vocab"), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch, moe_impl: str = "sort", aux_weight: float = 0.0):
+    logits, _ = forward(params, cfg, batch)
+    return token_cross_entropy(logits, batch["labels"])
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict, cache: Dict,
+            moe_impl: str = "sort"):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = constrain(x, "batch", "seq", "embed")
+    x, cache = _run(params, cfg, x, cache, "parallel")
+    cache["pos"] = jnp.asarray(batch["tokens"].shape[1], jnp.int32)
+    x = L.rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return (x @ params["lm_head"])[:, 0], cache
+
+
+def decode_step(params, cfg: ModelConfig, batch: Dict, cache: Dict,
+                moe_impl: str = "sort"):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)  # [B,1,d]
+    x, cache = _run(params, cfg, x, cache, "step")
+    cache["pos"] = cache["pos"] + 1
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return (x @ params["lm_head"])[:, 0], cache

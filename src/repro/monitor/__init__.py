@@ -1,0 +1,2 @@
+from repro.monitor.monitor import (  # noqa: F401
+    ResourceMonitor, RingBuffer, StageTimer, MonitorConfig)

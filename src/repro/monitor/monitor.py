@@ -1,0 +1,250 @@
+"""Low-overhead resource monitor (paper §3.4, §5.8).
+
+Design mirrors the paper:
+  * decoupled, low-priority background daemon thread — the RAG pipeline never
+    calls the probes on its critical path;
+  * fixed-size circular buffer per metric (default 2 MB equivalent) so memory
+    stays bounded on long runs;
+  * the monitor measures its own probe cost and *adapts the sampling period*
+    (backs off when probes get expensive);
+  * graceful shutdown: buffered samples are flushed to disk on stop(),
+    atexit, or crash (``flush_on_crash`` installs an excepthook).
+
+Probes (CPU container; NVML/GPM probes from the paper become host probes +
+JAX device-memory accounting — DESIGN.md §2):
+  * /proc/self/statm       — host RSS;
+  * /proc/stat             — system CPU utilization;
+  * /proc/self/io          — read/write bytes (I/O throughput);
+  * jax.live_arrays        — "device" memory held by JAX buffers;
+  * user callbacks         — e.g. ``db.stats()`` gauges.
+"""
+from __future__ import annotations
+
+import atexit
+import json
+import os
+import sys
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+PAGE = os.sysconf("SC_PAGE_SIZE") if hasattr(os, "sysconf") else 4096
+
+
+class RingBuffer:
+    """Fixed-capacity (t, value) ring; oldest samples overwritten."""
+
+    def __init__(self, capacity: int = 131072):   # 2 floats * 8B * 128Ki = 2 MB
+        self.t = np.zeros(capacity, np.float64)
+        self.v = np.zeros(capacity, np.float64)
+        self.capacity = capacity
+        self.n = 0                                # total pushed
+
+    def push(self, t: float, v: float) -> None:
+        i = self.n % self.capacity
+        self.t[i] = t
+        self.v[i] = v
+        self.n += 1
+
+    def values(self) -> Tuple[np.ndarray, np.ndarray]:
+        if self.n <= self.capacity:
+            return self.t[: self.n].copy(), self.v[: self.n].copy()
+        i = self.n % self.capacity
+        return (np.concatenate([self.t[i:], self.t[:i]]),
+                np.concatenate([self.v[i:], self.v[:i]]))
+
+    def summary(self) -> Dict[str, float]:
+        _, v = self.values()
+        if not len(v):
+            return {"n": 0}
+        return {"n": int(self.n), "mean": float(v.mean()),
+                "max": float(v.max()), "min": float(v.min()),
+                "last": float(v[-1])}
+
+
+def _read_rss_bytes() -> float:
+    try:
+        with open("/proc/self/statm") as f:
+            return float(f.read().split()[1]) * PAGE
+    except OSError:
+        return 0.0
+
+
+def _read_cpu_times() -> Tuple[float, float]:
+    """(busy, total) jiffies across all cpus."""
+    try:
+        with open("/proc/stat") as f:
+            parts = f.readline().split()[1:]
+        vals = [float(x) for x in parts]
+        idle = vals[3] + (vals[4] if len(vals) > 4 else 0.0)
+        total = sum(vals)
+        return total - idle, total
+    except OSError:
+        return 0.0, 1.0
+
+
+def _read_io_bytes() -> Tuple[float, float]:
+    try:
+        out = {"read_bytes": 0.0, "write_bytes": 0.0}
+        with open("/proc/self/io") as f:
+            for line in f:
+                k, _, v = line.partition(":")
+                if k in out:
+                    out[k] = float(v)
+        return out["read_bytes"], out["write_bytes"]
+    except OSError:
+        return 0.0, 0.0
+
+
+def _jax_device_bytes() -> float:
+    try:
+        import jax
+        return float(sum(a.nbytes for a in jax.live_arrays()))
+    except Exception:
+        return 0.0
+
+
+@dataclass
+class MonitorConfig:
+    interval_s: float = 0.1
+    ring_capacity: int = 131072
+    out_path: str = ""
+    adaptive: bool = True
+    max_probe_fraction: float = 0.05   # probes may use ≤5% of wall time
+    flush_on_crash: bool = True
+
+
+class ResourceMonitor:
+    """Background sampling daemon with bounded buffers and graceful flush."""
+
+    def __init__(self, cfg: MonitorConfig = MonitorConfig()):
+        self.cfg = cfg
+        self.buffers: Dict[str, RingBuffer] = {}
+        self.callbacks: Dict[str, Callable[[], float]] = {}
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._interval = cfg.interval_s
+        self.probe_cost_s = 0.0
+        self._prev_cpu = _read_cpu_times()
+        self._prev_io = _read_io_bytes()
+        self._prev_io_t = time.perf_counter()
+        self._flushed = False
+
+    def add_gauge(self, name: str, fn: Callable[[], float]) -> None:
+        self.callbacks[name] = fn
+
+    def _buf(self, name: str) -> RingBuffer:
+        if name not in self.buffers:
+            self.buffers[name] = RingBuffer(self.cfg.ring_capacity)
+        return self.buffers[name]
+
+    def _sample_once(self) -> None:
+        t0 = time.perf_counter()
+        self._buf("host_rss_bytes").push(t0, _read_rss_bytes())
+        busy, total = _read_cpu_times()
+        pb, pt = self._prev_cpu
+        if total > pt:
+            self._buf("cpu_util").push(t0, (busy - pb) / (total - pt))
+        self._prev_cpu = (busy, total)
+        rb, wb = _read_io_bytes()
+        prb, pwb = self._prev_io
+        dt = max(t0 - self._prev_io_t, 1e-9)
+        self._buf("io_read_Bps").push(t0, (rb - prb) / dt)
+        self._buf("io_write_Bps").push(t0, (wb - pwb) / dt)
+        self._prev_io, self._prev_io_t = (rb, wb), t0
+        self._buf("jax_device_bytes").push(t0, _jax_device_bytes())
+        for name, fn in list(self.callbacks.items()):
+            try:
+                self._buf(name).push(t0, float(fn()))
+            except Exception:
+                pass
+        cost = time.perf_counter() - t0
+        self.probe_cost_s += cost
+        if self.cfg.adaptive:
+            # keep probe time under max_probe_fraction of wall time
+            floor = cost / self.cfg.max_probe_fraction
+            self._interval = max(self.cfg.interval_s, floor)
+
+    def _run(self) -> None:
+        while not self._stop.wait(self._interval):
+            self._sample_once()
+
+    def start(self) -> "ResourceMonitor":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="ragperf-monitor")
+        self._thread.start()
+        atexit.register(self.stop)
+        if self.cfg.flush_on_crash:
+            prev_hook = sys.excepthook
+
+            def hook(tp, val, tb):
+                self.stop()
+                prev_hook(tp, val, tb)
+
+            sys.excepthook = hook
+        return self
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+        self._thread = None
+        if self.cfg.out_path and not self._flushed:
+            self.flush(self.cfg.out_path)
+
+    def flush(self, path: str) -> None:
+        """Persist all buffers as JSON time-series traces."""
+        data = {}
+        for name, buf in self.buffers.items():
+            t, v = buf.values()
+            data[name] = {"t": t.tolist(), "v": v.tolist(),
+                          "summary": buf.summary()}
+        data["_probe_cost_s"] = self.probe_cost_s
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(data, f)
+        self._flushed = True
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        return {k: b.summary() for k, b in self.buffers.items()}
+
+
+class StageTimer:
+    """Per-stage wall-clock accumulation (the component-level profile)."""
+
+    def __init__(self):
+        self.totals: Dict[str, float] = {}
+        self.counts: Dict[str, int] = {}
+        self.series: Dict[str, List[float]] = {}
+
+    class _Ctx:
+        def __init__(self, timer: "StageTimer", name: str):
+            self.timer, self.name = timer, name
+
+        def __enter__(self):
+            self.t0 = time.perf_counter()
+            return self
+
+        def __exit__(self, *exc):
+            dt = time.perf_counter() - self.t0
+            t = self.timer
+            t.totals[self.name] = t.totals.get(self.name, 0.0) + dt
+            t.counts[self.name] = t.counts.get(self.name, 0) + 1
+            t.series.setdefault(self.name, []).append(dt)
+            return False
+
+    def stage(self, name: str) -> "_Ctx":
+        return self._Ctx(self, name)
+
+    def breakdown(self) -> Dict[str, float]:
+        return dict(self.totals)
+
+    def mean(self, name: str) -> float:
+        return self.totals.get(name, 0.0) / max(self.counts.get(name, 0), 1)

@@ -1,0 +1,448 @@
+"""Trip-weighted HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` visits every instruction ONCE — a
+``lax.scan`` over 80 layers reports 1/80th of the real FLOPs (verified
+empirically; see EXPERIMENTS.md §Dry-run).  This module re-derives
+flops / HBM bytes / collective link bytes from the post-optimization HLO
+text with while-loop bodies weighted by their trip counts
+(``known_trip_count`` backend config), recursively for nested loops.
+
+Cost model:
+  flops       — dot ops: 2 · |result| · |contracted dims|; weighted by the
+                computation's execution count.  (Elementwise flops are
+                ignored — they are bandwidth, not MXU, costs.)
+  hbm bytes   — per *top-level* instruction in executable computations
+                (entry, while bodies/conds, called comps): result bytes +
+                operand bytes, looking shapes up in the module symbol table.
+                Fusion internals don't touch HBM and are skipped, matching
+                XLA's fusion-boundary bytes-accessed model.
+  link bytes  — collective ops × ring-algorithm factors (see analysis.py).
+
+Shapes in an SPMD-partitioned module are per-device, so all three results
+are per-chip quantities.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\(.*?\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s*"
+    r"([a-z][\w\-]*)\((.*)$")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_CALL_REF_RE = re.compile(r"(calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\s*\{\\?"n\\?":\s*\\?"(\d+)')
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SKIP_BYTES_OPS = frozenset((
+    "tuple", "get-tuple-element", "parameter", "constant", "after-all",
+    "bitcast", "partition-id", "replica-id", "iota"))
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    """Total (elements, bytes) of every dtype[dims] token in ``text``."""
+    elems = 0
+    byts = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES.get(dt, 4)
+    return elems, byts
+
+
+@dataclass
+class Instr:
+    name: str
+    result_text: str
+    opcode: str
+    rest: str            # operand list + attributes
+
+    def result_bytes(self) -> int:
+        return _shape_elems_bytes(self.result_text)[1]
+
+    def result_elems(self) -> int:
+        return _shape_elems_bytes(self.result_text)[0]
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    param_text: str
+    instrs: List[Instr] = field(default_factory=list)
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _HEADER_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = Computation(m.group(2), bool(m.group(1)), m.group(3))
+                if cur.is_entry:
+                    entry = cur.name
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.instrs.append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4)))
+    return comps, entry
+
+
+def _exec_weights(comps: Dict[str, Computation], entry: str
+                  ) -> Dict[str, float]:
+    """Execution count per computation, propagating while trip counts.
+
+    Fusion/reduce ``calls``/``to_apply`` edges carry weight 1 per call site
+    (their cost is charged where referenced); while body/condition edges
+    carry the trip count.
+    """
+    weights: Dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    # BFS in call order; modules are topologically ordered enough in practice
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        w = weights[cname]
+        for ins in comp.instrs:
+            trip = 1.0
+            if ins.opcode == "while":
+                m = _TRIP_RE.search(ins.rest)
+                trip = float(m.group(1)) if m else 1.0
+            refs = []
+            for mref in _CALL_REF_RE.finditer(ins.rest):
+                key, ref = mref.group(1), mref.group(2)
+                refs.append((ref, trip if key in ("body", "condition")
+                             else 1.0))
+            for mref in _BRANCH_RE.finditer(ins.rest):
+                for ref in re.split(r",\s*%?", mref.group(1).lstrip("%")):
+                    refs.append((ref.strip().lstrip("%"), 1.0))
+            for ref, mult in refs:
+                if ref in comps:
+                    weights[ref] = weights.get(ref, 0.0) + w * mult
+                    if ref not in seen:
+                        seen.add(ref)
+                        order.append(ref)
+    return weights
+
+
+def _symbol_table(comps: Dict[str, Computation]) -> Dict[str, str]:
+    """(comp, instr-name) -> result shape text; plus parameter shapes."""
+    table: Dict[str, str] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            table[f"{comp.name}/{ins.name}"] = ins.result_text
+        # params: "param_0.1: f32[2,4], param_1: (f32[2], s32[])"
+        for pm in re.finditer(r"%?([\w\.\-]+):\s*(\([^)]*\)|[a-z0-9]+"
+                              r"\[[^\]]*\](?:\{[^}]*\})?)", comp.param_text):
+            table[f"{comp.name}/{pm.group(1)}"] = pm.group(2)
+    return table
+
+
+def _dot_flops(ins: Instr, comp: Computation, table: Dict[str, str]) -> float:
+    out_elems = ins.result_elems()
+    m = _CONTRACT_RE.search(ins.rest)
+    # lhs shape = first operand
+    op = _OPERAND_RE.search(ins.rest)
+    contract = 1
+    if m and op:
+        lhs_text = table.get(f"{comp.name}/{op.group(1)}", "")
+        dims_txt = _SHAPE_RE.search(lhs_text)
+        if dims_txt:
+            lhs_dims = [int(d) for d in dims_txt.group(2).split(",") if d]
+            for ci in m.group(1).split(","):
+                if ci and int(ci) < len(lhs_dims):
+                    contract *= lhs_dims[int(ci)]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(ins: Instr, comp: Computation, table: Dict[str, str]) -> float:
+    # window dims: "window={size=3 ...}" — approximate: 2·|out|·prod(size)·Cin
+    out_elems = ins.result_elems()
+    msize = re.search(r"size=([\dx]+)", ins.rest)
+    k = 1
+    if msize:
+        for d in msize.group(1).split("x"):
+            k *= int(d)
+    op = _OPERAND_RE.search(ins.rest)
+    cin = 1
+    if op:
+        lhs_text = table.get(f"{comp.name}/{op.group(1)}", "")
+        dims_txt = _SHAPE_RE.search(lhs_text)
+        if dims_txt:
+            dims = [int(d) for d in dims_txt.group(2).split(",") if d]
+            if len(dims) >= 2:
+                cin = dims[1]
+    return 2.0 * out_elems * k * cin
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACE_RE.search(rest)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+def _link_factor(kind: str, n: int) -> float:
+    if kind == "all-gather":
+        return (n - 1) / n
+    if kind == "all-reduce":
+        return 2 * (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(n - 1)
+    if kind == "all-to-all":
+        return (n - 1) / n
+    return 1.0
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    link_bytes: float = 0.0
+    sq_bytes: float = 0.0        # traffic of seq²-shaped tensors (see below)
+    collectives: Dict[str, float] = field(default_factory=dict)
+    per_op_flops: Dict[str, float] = field(default_factory=dict)
+
+
+def _sq_tensor_bytes(text: str, seq_len: int,
+                     feature_dims: frozenset = frozenset()) -> int:
+    """Bytes of seq²-shaped tensors — the attention-logits / decay-matrix
+    class.  A Pallas flash-style kernel keeps these tiles in VMEM; the XLA
+    fallback writes them to HBM.  The roofline reports both so the kernel's
+    projected win is explicit.
+
+    After SPMD one of the two seq dims is usually sharded, so a dim counts
+    as "seq-like" if it equals seq_len, or divides it with quotient ≤ 64
+    while not being a known feature dim (d_model/d_ff/head_dim/... — passed
+    in by the caller to avoid misclassifying [B,S,d_model] activations)."""
+    def seq_like(d: int) -> bool:
+        if d == seq_len:
+            return True
+        return (d not in feature_dims and d >= 16 and seq_len % d == 0
+                and seq_len // d <= 64)
+
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        ds = [int(d) for d in dims.split(",") if d]
+        if sum(1 for d in ds if seq_like(d)) >= 2:
+            n = 1
+            for d in ds:
+                n *= d
+            total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+_FEATURE_DIMS: frozenset = frozenset()
+
+
+def analyze(hlo_text: str, seq_len: int = 0,
+            feature_dims: frozenset = frozenset()) -> HloCost:
+    global _FEATURE_DIMS
+    _FEATURE_DIMS = frozenset(feature_dims)
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        return HloCost()
+    weights = _exec_weights(comps, entry)
+    table = _symbol_table(comps)
+    out = HloCost(collectives={k: 0.0 for k in _COLLECTIVES})
+
+    # flops: all computations (dots inside fusions are charged at the
+    # fusion's execution weight because calls= edges propagate weight)
+    for comp in comps.values():
+        w = weights.get(comp.name, 0.0)
+        if w == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                fl = _dot_flops(ins, comp, table) * w
+                out.flops += fl
+                out.per_op_flops[ins.name.split(".")[0]] = \
+                    out.per_op_flops.get(ins.name.split(".")[0], 0.0) + fl
+            elif ins.opcode == "convolution":
+                out.flops += _conv_flops(ins, comp, table) * w
+
+    # hbm bytes + collectives: executable computations only (entry + loop
+    # bodies/conds).  Heuristic: computations whose name does not start with
+    # "fused" / "region" reductions — identify executable as: entry, and any
+    # comp referenced via body=/condition= edges.
+    exec_comps = {entry}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                for mref in _CALL_REF_RE.finditer(ins.rest):
+                    if mref.group(1) in ("body", "condition") \
+                            and mref.group(2) in comps:
+                        exec_comps.add(mref.group(2))
+            elif ins.opcode == "conditional":
+                for mref in _BRANCH_RE.finditer(ins.rest):
+                    for ref in re.split(r",\s*", mref.group(1)):
+                        ref = ref.strip().lstrip("%")
+                        if ref in comps:
+                            exec_comps.add(ref)
+
+    for cname in exec_comps:
+        comp = comps[cname]
+        w = weights.get(cname, 0.0)
+        if w == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode in _COLLECTIVES or \
+                    any(ins.opcode == c + s for c in _COLLECTIVES
+                        for s in ("-start",)):
+                kind = ins.opcode.replace("-start", "")
+                b = ins.result_bytes() * _link_factor(
+                    kind, _group_size(ins.rest)) * w
+                out.collectives[kind] += b
+                out.link_bytes += b
+                continue
+            if ins.opcode.endswith("-done") or ins.opcode in _SKIP_BYTES_OPS \
+                    or ins.opcode in ("while", "conditional", "call"):
+                continue   # loop/branch bodies are charged separately
+            b, sq = _instr_traffic(ins, cname, comps, table, seq_len)
+            out.hbm_bytes += b * w
+            out.sq_bytes += sq * w
+    return out
+
+
+def _operands(ins: Instr):
+    return [m.group(1) for m in
+            _OPERAND_RE.finditer(ins.rest.split(", metadata")[0])]
+
+
+def _bytes_of(name: str, cname: str, table: Dict[str, str]) -> int:
+    return _shape_elems_bytes(table.get(f"{cname}/{name}", ""))[1]
+
+
+def _sq_of(name: str, cname: str, table: Dict[str, str], seq_len: int) -> int:
+    if not seq_len:
+        return 0
+    return _sq_tensor_bytes(table.get(f"{cname}/{name}", ""), seq_len,
+                            _FEATURE_DIMS)
+
+
+def _fusion_param_charges(fcomp: Computation, table: Dict[str, str]):
+    """Per-parameter-index HBM charge for a fusion body.
+
+    Parameters consumed only through dynamic-slice are charged the slice
+    size (the loop reads one timestep of a stacked buffer, not the buffer);
+    the buffer operand of a dynamic-update-slice is charged the update size
+    (in-place aliased write).  Returns (charges: {idx: bytes}, root_is_dus).
+    """
+    params: Dict[str, int] = {}
+    for ins in fcomp.instrs:
+        if ins.opcode == "parameter":
+            try:
+                params[ins.name] = int(ins.rest.split(")")[0])
+            except ValueError:
+                continue
+    charges: Dict[int, int] = {}
+    for pname, idx in params.items():
+        consumers = [i for i in fcomp.instrs
+                     if f"%{pname}" in i.rest and i.opcode != "parameter"]
+        full = _shape_elems_bytes(table.get(f"{fcomp.name}/{pname}", ""))[1]
+        if consumers and all(c.opcode in ("dynamic-slice", "slice", "gather")
+                             for c in consumers):
+            charges[idx] = sum(c.result_bytes() for c in consumers)
+        elif consumers and any(
+                c.opcode == "dynamic-update-slice"
+                and _operands(c) and _operands(c)[0] == pname
+                for c in consumers):
+            dus = next(c for c in consumers
+                       if c.opcode == "dynamic-update-slice")
+            ops = _operands(dus)
+            upd = ops[1] if len(ops) > 1 else pname
+            charges[idx] = _shape_elems_bytes(
+                table.get(f"{fcomp.name}/{upd}", ""))[1]
+        else:
+            charges[idx] = full
+    root_is_dus = any(i.opcode == "dynamic-update-slice"
+                      for i in fcomp.instrs)
+    dus_update = 0
+    if root_is_dus:
+        for i in fcomp.instrs:
+            if i.opcode == "dynamic-update-slice":
+                ops = _operands(i)
+                if len(ops) > 1:
+                    dus_update += _shape_elems_bytes(
+                        table.get(f"{fcomp.name}/{ops[1]}", ""))[1]
+    return charges, root_is_dus, dus_update
+
+
+def _instr_traffic(ins: Instr, cname: str, comps: Dict[str, Computation],
+                   table: Dict[str, str], seq_len: int):
+    """(hbm_bytes, sq_bytes) for one top-level instruction, with slice-aware
+    semantics for dynamic-slice / dynamic-update-slice / fusions thereof."""
+    ops = _operands(ins)
+    if ins.opcode in ("dynamic-slice", "slice", "gather"):
+        b = 2 * ins.result_bytes()
+        sq = 2 * _sq_tensor_bytes(ins.result_text, seq_len,
+                                  _FEATURE_DIMS) if seq_len else 0
+        return b, sq
+    if ins.opcode == "dynamic-update-slice":
+        upd = _bytes_of(ops[1], cname, table) if len(ops) > 1 else \
+            ins.result_bytes()
+        return 2 * upd, 0
+    if ins.opcode == "fusion":
+        m = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+        fname = m.group(1) if m else None
+        if fname in comps:
+            charges, root_dus, dus_update = _fusion_param_charges(
+                comps[fname], table)
+            b = 0
+            sq = 0
+            for i, opn in enumerate(ops):
+                full = _bytes_of(opn, cname, table)
+                chg = min(charges.get(i, full), full)
+                b += chg
+                if seq_len and chg == full:
+                    sq += _sq_of(opn, cname, table, seq_len)
+            if root_dus and dus_update:
+                b += dus_update
+            else:
+                b += ins.result_bytes()
+                sq += _sq_tensor_bytes(ins.result_text, seq_len,
+                                       _FEATURE_DIMS) if seq_len else 0
+            return b, sq
+    # default: result + all operands
+    b = ins.result_bytes()
+    sq = _sq_tensor_bytes(ins.result_text, seq_len,
+                          _FEATURE_DIMS) if seq_len else 0
+    for opn in ops:
+        b += _bytes_of(opn, cname, table)
+        sq += _sq_of(opn, cname, table, seq_len)
+    return b, sq

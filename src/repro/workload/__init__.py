@@ -1,0 +1,3 @@
+from repro.workload.corpus import SyntheticCorpus, CorpusConfig  # noqa: F401
+from repro.workload.generator import (  # noqa: F401
+    WorkloadConfig, WorkloadGenerator, Request)

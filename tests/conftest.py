@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests run against the source tree
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and
+# benches must see 1 device (the 512-device override is dryrun.py-only).

@@ -1,0 +1,156 @@
+"""Embedders, rerankers, generator, chunking, tokenizer unit tests."""
+import numpy as np
+import pytest
+
+from repro.core.chunking import chunk_document
+from repro.core.embedder import HashEmbedder, TransformerEmbedder
+from repro.core.generator import ExtractiveLLM, ModelLLM, build_prompt
+from repro.core.interfaces import Chunk
+from repro.core.reranker import (BiEncoderReranker, CrossEncoderReranker,
+                                 OverlapReranker)
+from repro.core.tokenizer import HashTokenizer
+
+
+# -- tokenizer ---------------------------------------------------------------
+
+def test_tokenizer_deterministic_and_stable():
+    t = HashTokenizer()
+    a = t.encode("the capital of france is paris")
+    b = t.encode("the capital of france is paris")
+    assert a == b
+    assert all(t.n_special <= i < t.vocab_size for i in a)
+
+
+def test_tokenizer_stopwords_dropped():
+    t = HashTokenizer()
+    assert t.content_words("what is the capital of x") == ["capital", "x"]
+
+
+def test_encode_batch_padding():
+    t = HashTokenizer()
+    out = t.encode_batch(["one two three", "one"], max_len=5)
+    assert out.shape == (2, 5)
+    assert out[1, 1] == 0                      # padded with pad_id
+
+
+# -- chunking ----------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["fixed", "separator", "semantic"])
+def test_chunking_covers_content(method):
+    text = ". ".join(f"sentence number {i} about topic {i % 3}"
+                     for i in range(40)) + "."
+    spans = chunk_document(text, method, size=200)
+    assert spans, method
+    joined = "".join(s[2] for s in spans)
+    if method == "fixed":
+        # fixed-length may break word boundaries (paper §3.3.1) but must
+        # cover every character
+        assert len(joined) >= len(text)
+    else:
+        for i in range(40):
+            assert f"sentence number {i}" in joined
+
+
+def test_fixed_chunk_offsets_are_accurate():
+    text = "abcdefghij" * 50
+    for start, end, piece in chunk_document(text, "fixed", size=64):
+        assert text[start:end] == piece
+
+
+def test_fixed_overlap():
+    text = "x" * 100
+    spans = chunk_document(text, "fixed", size=40, overlap=10)
+    assert spans[1][0] == 30                  # step = size - overlap
+
+
+# -- embedders ---------------------------------------------------------------
+
+def test_hash_embedder_similarity_orders_correctly():
+    e = HashEmbedder(dim=128)
+    v = e.embed(["alpha beta gamma", "alpha beta delta", "omega psi chi"])
+    sim_close = v[0] @ v[1]
+    sim_far = v[0] @ v[2]
+    assert sim_close > sim_far + 0.2
+    np.testing.assert_allclose(np.linalg.norm(v, axis=1), 1.0, atol=1e-5)
+
+
+def test_transformer_embedder_batching_invariance():
+    e = TransformerEmbedder(dim=32, d_model=64, n_layers=1, max_len=16,
+                            batch_size=4)
+    texts = [f"text number {i}" for i in range(6)]
+    v_all = e.embed(texts)
+    v_one = np.stack([e.embed([t])[0] for t in texts])
+    np.testing.assert_allclose(v_all, v_one, atol=1e-4)
+
+
+# -- rerankers ---------------------------------------------------------------
+
+def _cands():
+    return [Chunk(0, 0, "the capital of france is paris today"),
+            Chunk(1, 1, "bananas are yellow fruit that monkeys eat"),
+            Chunk(2, 2, "france has many regions and cities and wine")]
+
+
+def test_overlap_reranker_ranks_gold_first():
+    r = OverlapReranker()
+    top = r.rerank("what is the capital of france?", _cands(), 2)
+    assert top[0][0].chunk_id == 0
+
+
+def test_bi_encoder_reranker_runs():
+    r = BiEncoderReranker(HashEmbedder(dim=64))
+    top = r.rerank("what is the capital of france?", _cands(), 3)
+    assert len(top) == 3
+    assert top[0][0].chunk_id == 0
+
+
+def test_cross_encoder_reranker_deterministic():
+    r = CrossEncoderReranker(d_model=32, n_layers=1, max_len=32)
+    t1 = r.rerank("capital france", _cands(), 3)
+    t2 = r.rerank("capital france", _cands(), 3)
+    assert [c.chunk_id for c, _ in t1] == [c.chunk_id for c, _ in t2]
+
+
+def test_rerank_empty_candidates():
+    assert OverlapReranker().rerank("q", [], 3) == []
+
+
+# -- generator ---------------------------------------------------------------
+
+def test_extractive_llm_answers_from_context():
+    llm = ExtractiveLLM()
+    ctx = [Chunk(0, 0, "filler. the capital of entity7 is val123. more.")]
+    out = llm.generate(["what is the capital of entity7?"], [ctx])
+    assert out == ["val123"]
+
+
+def test_extractive_llm_prefers_fresh_version():
+    llm = ExtractiveLLM()
+    ctx = [Chunk(0, 0, "the capital of entity7 is val1.", version=0),
+           Chunk(1, 0, "the capital of entity7 is val2.", version=3)]
+    out = llm.generate(["what is the capital of entity7?"], [ctx])
+    assert out == ["val2"]
+
+
+def test_extractive_llm_no_answer_empty():
+    llm = ExtractiveLLM()
+    out = llm.generate(["what is the capital of entity9?"],
+                       [[Chunk(0, 0, "nothing useful")]])
+    assert out == [""]
+
+
+def test_model_llm_generates_and_records_stats():
+    from repro import configs
+    llm = ModelLLM(configs.get_smoke("llama3_8b"), max_prompt=32, max_new=3,
+                   batch_size=2)
+    out = llm.generate(["question one", "question two", "question three"],
+                       [[], [], []])
+    assert len(out) == 3
+    assert all(o for o in out)
+    s = llm.stats.summary()
+    assert s["ttft_mean_s"] > 0 and s["tokens_out"] == 12
+
+
+def test_build_prompt_contains_context_and_question():
+    p = build_prompt("my question", [Chunk(0, 0, "ctx text")])
+    assert "ctx text" in p and "my question" in p

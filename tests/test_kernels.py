@@ -1,0 +1,94 @@
+"""Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes.
+
+(hypothesis is unavailable offline; the sweeps below are seeded
+property-style grids over the same parameter space.)
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.quant_score import quant_score_pallas
+from repro.kernels.topk_search import topk_search_pallas
+
+
+@pytest.mark.parametrize("nq,N,d,k", [
+    (1, 64, 16, 1),
+    (7, 1000, 64, 5),
+    (32, 4096, 128, 16),
+    (5, 130, 48, 8),          # N not a multiple of the block
+])
+def test_topk_search_matches_oracle(nq, N, d, k):
+    rng = np.random.default_rng(nq * 1000 + N)
+    q = jnp.asarray(rng.standard_normal((nq, d)), jnp.float32)
+    vecs = jnp.asarray(rng.standard_normal((N, d)), jnp.float32)
+    live = jnp.asarray(rng.random(N) > 0.2)
+    s_ref, i_ref = ref.topk_search(q, vecs, live, k)
+    s_ker, i_ker = topk_search_pallas(q, vecs, live, k, interpret=True)
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_ker), rtol=1e-5)
+    assert (np.asarray(i_ref) == np.asarray(i_ker)).all()
+
+
+def test_topk_search_all_dead_rows_return_minus_one():
+    q = jnp.ones((2, 8), jnp.float32)
+    vecs = jnp.ones((16, 8), jnp.float32)
+    live = jnp.zeros((16,), bool)
+    _, idx = topk_search_pallas(q, vecs, live, 4, interpret=True)
+    assert (np.asarray(idx) == -1).all()
+
+
+@pytest.mark.parametrize("nq,N,d", [(3, 100, 32), (16, 2048, 128), (1, 64, 64)])
+def test_quant_score_matches_oracle(nq, N, d):
+    rng = np.random.default_rng(nq + N)
+    q = jnp.asarray(rng.standard_normal((nq, d)), jnp.float32)
+    codes = jnp.asarray(rng.integers(-127, 128, (N, d)).astype(np.int8))
+    scale = jnp.asarray((rng.random(d).astype(np.float32) + 0.5) / 127)
+    s_ref = ref.quant_score(q, codes, scale)
+    s_ker = quant_score_pallas(q, codes, scale, interpret=True)
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_ker),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,dh,causal,dtype", [
+    (1, 2, 2, 64, 16, True, jnp.float32),
+    (2, 4, 2, 128, 32, True, jnp.float32),
+    (2, 4, 1, 128, 64, False, jnp.float32),
+    (1, 8, 8, 256, 32, True, jnp.bfloat16),
+])
+def test_flash_attention_matches_oracle(B, H, Hkv, S, dh, causal, dtype):
+    rng = np.random.default_rng(B * 100 + S)
+    q = jnp.asarray(rng.standard_normal((B, H, S, dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, dh)), dtype)
+    o_ref = ref.flash_attention(q, k, v, causal=causal)
+    o_ker = flash_attention_pallas(q, k, v, causal=causal, bq=64, bk=64,
+                                   interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_ker, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_first_row_equals_v0():
+    """Property: causal attention at position 0 returns exactly v[0]."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 2, 64, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 64, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 64, 16)), jnp.float32)
+    o = flash_attention_pallas(q, k, v, causal=True, bq=32, bk=32,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(o)[:, :, 0], np.asarray(v)[:, :, 0],
+                               rtol=1e-5)
+
+
+def test_ops_dispatch_xla_mode(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "xla")
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((2, 16)), jnp.float32)
+    vecs = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    live = jnp.ones((32,), bool)
+    s, i = ops.topk_search(q, vecs, live, 3)
+    s2, i2 = ref.topk_search(q, vecs, live, 3)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s2))

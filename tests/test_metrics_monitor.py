@@ -1,0 +1,90 @@
+"""Quality metrics exactness + monitor ring buffer / stage timer behaviour."""
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.interfaces import StageTrace
+from repro.metrics.quality import (context_recall, factual_consistency,
+                                   query_accuracy)
+from repro.monitor.monitor import (MonitorConfig, ResourceMonitor, RingBuffer,
+                                   StageTimer)
+
+
+def _trace(answer, truth, retrieved, gold, reranked=None):
+    return StageTrace(query="q", retrieved_ids=retrieved,
+                      reranked_ids=reranked or retrieved, answer=answer,
+                      ground_truth=truth, gold_chunk_ids=gold)
+
+
+def test_context_recall_exact():
+    traces = [_trace("a", "a", [1, 2], [2]),     # hit
+              _trace("a", "a", [1, 2], [3]),     # miss
+              _trace("a", "a", [5], [5, 9])]     # hit (any gold)
+    assert context_recall(traces, "retrieved") == 2 / 3
+
+
+def test_query_accuracy_f1_and_exact():
+    traces = [_trace("val1", "val1", [], [1]),
+              _trace("the answer is val2", "val2", [], [1]),
+              _trace("wrong", "val3", [], [1])]
+    q = query_accuracy(traces)
+    assert q["exact"] == 1 / 3
+    assert 0.3 < q["f1"] < 0.8
+
+
+def test_factual_consistency_copied_vs_hallucinated():
+    chunks = {1: "the capital of x is val9"}
+    traces = [_trace("val9", "val9", [1], [1]),
+              _trace("banana", "val9", [1], [1])]
+    fc = factual_consistency(traces, lambda cid: chunks.get(cid, ""))
+    assert fc == 0.5
+
+
+def test_ring_buffer_wraparound():
+    rb = RingBuffer(capacity=8)
+    for i in range(20):
+        rb.push(float(i), float(i))
+    t, v = rb.values()
+    assert len(v) == 8
+    np.testing.assert_array_equal(v, np.arange(12, 20, dtype=float))
+    assert rb.summary()["n"] == 20
+
+
+def test_stage_timer_accumulates():
+    st = StageTimer()
+    with st.stage("a"):
+        time.sleep(0.01)
+    with st.stage("a"):
+        time.sleep(0.01)
+    assert st.counts["a"] == 2
+    assert st.totals["a"] >= 0.02
+    assert st.mean("a") >= 0.01
+
+
+def test_monitor_samples_and_flushes():
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "trace.json")
+        mon = ResourceMonitor(MonitorConfig(interval_s=0.02, out_path=out))
+        mon.add_gauge("custom", lambda: 42.0)
+        mon.start()
+        time.sleep(0.3)
+        mon.stop()
+        assert os.path.exists(out)
+        import json
+        data = json.load(open(out))
+        assert data["host_rss_bytes"]["summary"]["n"] > 0
+        assert data["custom"]["summary"]["last"] == 42.0
+        assert data["_probe_cost_s"] >= 0
+
+
+def test_monitor_overhead_bounded():
+    """Paper §5.8: the monitor's own probe cost stays tiny."""
+    mon = ResourceMonitor(MonitorConfig(interval_s=0.01))
+    mon.start()
+    t0 = time.perf_counter()
+    time.sleep(0.5)
+    wall = time.perf_counter() - t0
+    mon.stop()
+    assert mon.probe_cost_s < 0.2 * wall

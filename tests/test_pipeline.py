@@ -1,0 +1,108 @@
+"""End-to-end RAG pipeline behaviour: static quality, update freshness,
+stale-index degradation (the paper's §5.5 phenomenology), stage timers."""
+import numpy as np
+import pytest
+
+from repro.core.pipeline import PipelineConfig, RAGPipeline
+from repro.metrics.quality import evaluate_traces
+from repro.workload.corpus import CorpusConfig, SyntheticCorpus
+from repro.workload.generator import WorkloadConfig
+from repro.workload.runner import gold_chunks_for, run_workload
+
+
+def _static_eval(pipe, corpus, n=30):
+    rng = np.random.default_rng(0)
+    qs, ans, golds = [], [], []
+    for d in range(n):
+        q, a = corpus.question_for(d, rng)
+        qs.append(q)
+        ans.append(a)
+        golds.append(gold_chunks_for(pipe.db, d, a))
+    pipe.query(qs, ground_truth=ans, gold_chunks=golds)
+    return evaluate_traces(pipe.traces, pipe.db)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return SyntheticCorpus(CorpusConfig(n_docs=40, seed=0))
+
+
+def test_static_pipeline_high_quality(corpus):
+    pipe = RAGPipeline(PipelineConfig(
+        embedder="hash", index_type="flat", capacity=4096,
+        retrieve_k=8, rerank_k=3))
+    pipe.index_documents(corpus.all_documents())
+    q = _static_eval(pipe, corpus)
+    assert q["context_recall"] >= 0.95, q
+    assert q["f1"] >= 0.95, q
+    assert q["exact"] >= 0.95, q
+    assert q["factual_consistency"] >= 0.9, q
+
+
+def test_update_freshness_end_to_end():
+    corpus = SyntheticCorpus(CorpusConfig(n_docs=20, seed=1))
+    pipe = RAGPipeline(PipelineConfig(
+        embedder="hash", index_type="ivf", nlist=4, nprobe=4,
+        capacity=4096, retrieve_k=8, rerank_k=3, flat_capacity=512))
+    pipe.index_documents(corpus.all_documents())
+    rng = np.random.default_rng(2)
+    text, question, answer = corpus.make_update(5, rng)
+    pipe.update_document(5, text, version=corpus.versions[5])
+    golds = [gold_chunks_for(pipe.db, 5, answer)]
+    tr = pipe.query([question], ground_truth=[answer], gold_chunks=golds)
+    assert tr[0].answer == answer, \
+        f"stale answer {tr[0].answer!r} != fresh {answer!r}"
+
+
+def test_stale_index_misses_updates():
+    """Paper §5.5 config 1: without the hybrid flat buffer, updates are
+    invisible until rebuild and accuracy drops."""
+    corpus = SyntheticCorpus(CorpusConfig(n_docs=20, seed=3))
+    pipe = RAGPipeline(PipelineConfig(
+        embedder="hash", index_type="ivf", nlist=4, nprobe=4,
+        capacity=4096, retrieve_k=8, rerank_k=3, use_hybrid=False))
+    pipe.index_documents(corpus.all_documents())
+    rng = np.random.default_rng(4)
+    hits = 0
+    for d in range(5):
+        text, q, a = corpus.make_update(d, rng)
+        pipe.update_document(d, text, version=corpus.versions[d])
+        tr = pipe.query([q], ground_truth=[a])
+        hits += tr[-1].answer == a
+    assert hits <= 2, f"stale index unexpectedly fresh: {hits}/5"
+
+
+def test_workload_run_collects_all_metrics(corpus):
+    pipe = RAGPipeline(PipelineConfig(
+        embedder="hash", index_type="flat", capacity=8192,
+        retrieve_k=8, rerank_k=3))
+    pipe.index_documents(corpus.all_documents())
+    res = run_workload(pipe, corpus, WorkloadConfig(
+        query_frac=0.7, update_frac=0.2, insert_frac=0.05,
+        removal_frac=0.05, n_requests=40, seed=5))
+    assert res.qps > 0
+    assert res.quality["context_recall"] > 0.5
+    assert "query" in res.latencies and "update" in res.latencies
+    bd = pipe.breakdown()
+    for stage in ("embedding", "retrieval", "generation"):
+        assert stage in bd or stage == "embedding", bd
+
+
+def test_rerank_none_passthrough(corpus):
+    pipe = RAGPipeline(PipelineConfig(
+        embedder="hash", index_type="flat", capacity=4096,
+        reranker="none", retrieve_k=4, rerank_k=2))
+    pipe.index_documents(corpus.all_documents()[:10])
+    tr = pipe.query(["what is the capital of entity1?"])
+    assert tr[0].reranked_ids == tr[0].retrieved_ids[:2]
+
+
+def test_removal_stops_retrieval(corpus):
+    pipe = RAGPipeline(PipelineConfig(
+        embedder="hash", index_type="flat", capacity=4096,
+        retrieve_k=4, rerank_k=2))
+    pipe.index_documents(corpus.all_documents()[:10])
+    doc_slots = list(pipe.db.doc_slots[3])
+    pipe.remove_document(3)
+    tr = pipe.query(["what is the capital of entity3?"])
+    assert not set(tr[0].retrieved_ids) & set(doc_slots)

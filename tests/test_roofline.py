@@ -1,0 +1,88 @@
+"""HLO cost model: exact flops on known programs, trip-count weighting,
+collective byte accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import hlo_cost
+from repro.roofline.analysis import collective_bytes
+
+
+def _compile(f, *shapes):
+    return jax.jit(f).lower(*shapes).compile()
+
+
+def test_matmul_flops_exact():
+    c = _compile(lambda a, b: a @ b,
+                 jax.ShapeDtypeStruct((128, 256), jnp.float32),
+                 jax.ShapeDtypeStruct((256, 512), jnp.float32))
+    r = hlo_cost.analyze(c.as_text())
+    assert r.flops == 2 * 128 * 256 * 512
+
+
+def test_scan_flops_weighted_by_trip_count():
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), ()
+        return jax.lax.scan(body, x, ws)[0]
+
+    per_layer = 2 * 64 * 128 * 128
+    for L in (4, 12):
+        c = _compile(f, jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                     jax.ShapeDtypeStruct((L, 128, 128), jnp.float32))
+        r = hlo_cost.analyze(c.as_text())
+        assert abs(r.flops - L * per_layer) / (L * per_layer) < 0.01, \
+            (L, r.flops)
+
+
+def test_scan_matches_unrolled():
+    def mk(unroll):
+        def f(x, ws):
+            def body(c, w):
+                return jnp.tanh(c @ w), ()
+            return jax.lax.scan(body, x, ws, unroll=unroll)[0]
+        return f
+
+    sh = (jax.ShapeDtypeStruct((64, 128), jnp.float32),
+          jax.ShapeDtypeStruct((8, 128, 128), jnp.float32))
+    r_scan = hlo_cost.analyze(_compile(mk(False), *sh).as_text())
+    r_unroll = hlo_cost.analyze(_compile(mk(True), *sh).as_text())
+    assert abs(r_scan.flops - r_unroll.flops) / r_unroll.flops < 0.01
+    assert abs(r_scan.hbm_bytes - r_unroll.hbm_bytes) / r_unroll.hbm_bytes < 0.2
+
+
+def test_bytes_at_least_io():
+    c = _compile(lambda a, b: a @ b,
+                 jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                 jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    r = hlo_cost.analyze(c.as_text())
+    assert r.hbm_bytes >= 3 * 64 * 64 * 4
+
+
+def test_collective_parser_on_synthetic_hlo():
+    txt = """
+HloModule m
+
+ENTRY %main (p: f32[256]) -> f32[256] {
+  %p = f32[256]{0} parameter(0)
+  %ar = f32[256]{0} all-reduce(%p), replica_groups=[16,16]<=[256], to_apply=%add
+  ROOT %ag = f32[4096]{0} all-gather(%ar), replica_groups=[16,16]<=[256], dimensions={0}
+}
+"""
+    out = collective_bytes(txt)
+    # all-reduce: 2*(15/16)*1024B; all-gather: (15/16)*16384B
+    assert out["all-reduce"] == pytest.approx(2 * 15 / 16 * 1024)
+    assert out["all-gather"] == pytest.approx(15 / 16 * 16384)
+    assert out["total"] == out["all-reduce"] + out["all-gather"]
+
+
+def test_dot_inside_fusion_counted():
+    """Dots reached via calls= edges keep their weight."""
+    def f(x, w):
+        return jax.nn.relu(x @ w) * 2.0
+
+    c = _compile(f, jax.ShapeDtypeStruct((32, 64), jnp.float32),
+                 jax.ShapeDtypeStruct((64, 16), jnp.float32))
+    r = hlo_cost.analyze(c.as_text())
+    assert r.flops >= 2 * 32 * 64 * 16

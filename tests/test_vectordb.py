@@ -1,0 +1,148 @@
+"""Vector DB: exactness of flat search, IVF recall, quantized variants,
+hybrid update freshness, removal semantics, top-k merge property."""
+import numpy as np
+import pytest
+
+from repro.core.interfaces import Chunk
+from repro.core.vectordb import DBConfig, JaxVectorDB, make_db, merge_topk
+
+
+def _mk_vecs(n, dim, seed=0):
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal((n, dim)).astype(np.float32)
+    return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+
+def _chunks(n, per_doc=4):
+    return [Chunk(-1, i // per_doc, f"doc{i // per_doc} chunk{i % per_doc}")
+            for i in range(n)]
+
+
+def _fill(db, n=512, dim=32, seed=0):
+    vecs = _mk_vecs(n, dim, seed)
+    db.insert(vecs, _chunks(n))
+    db.build_index()
+    return vecs
+
+
+def test_flat_search_is_exact():
+    db = make_db("flat", dim=32, capacity=1024, use_hybrid=False)
+    vecs = _fill(db)
+    res = db.search(vecs[:20], 1)
+    for i, r in enumerate(res):
+        assert int(r.chunk_ids[0]) == i
+        assert abs(r.scores[0] - 1.0) < 1e-4
+
+
+def test_ivf_recall_above_threshold():
+    db = make_db("ivf", dim=32, capacity=2048, nlist=16, nprobe=8)
+    vecs = _fill(db, n=1024)
+    res = db.search(vecs[:100], 5)
+    hits = sum(1 for i, r in enumerate(res) if i in list(r.chunk_ids))
+    assert hits >= 90, f"IVF recall@5 too low: {hits}/100"
+
+
+def test_ivf_nprobe_monotone_recall():
+    """Property: recall is non-decreasing in nprobe."""
+    hits = []
+    for nprobe in (1, 4, 16):
+        db = make_db("ivf", dim=32, capacity=2048, nlist=16, nprobe=nprobe)
+        vecs = _fill(db, n=1024)
+        res = db.search(vecs[:100], 5)
+        hits.append(sum(1 for i, r in enumerate(res)
+                        if i in list(r.chunk_ids)))
+    assert hits[0] <= hits[1] <= hits[2], hits
+
+
+@pytest.mark.parametrize("quant", ["sq8", "pq"])
+def test_quantized_search_approximates_exact(quant):
+    idx = "flat" if quant == "sq8" else "ivf"
+    db = make_db(idx, quant, dim=32, capacity=2048, nlist=8, nprobe=8,
+                 pq_m=8)
+    vecs = _fill(db, n=512)
+    res = db.search(vecs[:50], 10)
+    hits = sum(1 for i, r in enumerate(res) if i in list(r.chunk_ids))
+    assert hits >= 40, f"{quant} recall@10: {hits}/50"
+
+
+def test_hybrid_fresh_inserts_immediately_searchable():
+    db = make_db("ivf", dim=32, capacity=2048, nlist=8, nprobe=8,
+                 flat_capacity=256)
+    _fill(db, n=512)
+    fresh = _mk_vecs(4, 32, seed=9)
+    db.insert(fresh, [Chunk(-1, 999, f"fresh{i}") for i in range(4)])
+    res = db.search(fresh, 1)
+    assert all(int(r.chunk_ids[0]) >= 512 for r in res)
+
+
+def test_no_hybrid_fresh_inserts_invisible_until_rebuild():
+    db = make_db("ivf", dim=32, capacity=2048, nlist=8, nprobe=8,
+                 use_hybrid=False)
+    _fill(db, n=512)
+    fresh = _mk_vecs(4, 32, seed=9)
+    db.insert(fresh, [Chunk(-1, 999, f"fresh{i}") for i in range(4)])
+    res = db.search(fresh, 1)
+    assert all(int(r.chunk_ids[0]) < 512 for r in res), \
+        "stale index must not see fresh rows (paper §5.5 config 1)"
+    db.build_index()
+    res = db.search(fresh, 1)
+    assert all(int(r.chunk_ids[0]) >= 512 for r in res)
+
+
+def test_rebuild_triggers_at_threshold():
+    db = make_db("ivf", dim=32, capacity=4096, nlist=8, nprobe=4,
+                 flat_capacity=64, rebuild_threshold=0.5)
+    _fill(db, n=256)
+    before = db.counters["rebuilds"]
+    db.insert(_mk_vecs(40, 32, seed=3),
+              [Chunk(-1, 500 + i, "x") for i in range(40)])
+    assert db.counters["rebuilds"] == before + 1
+
+
+def test_removal_is_immediate():
+    db = make_db("flat", dim=32, capacity=1024)
+    vecs = _fill(db, n=64)
+    gone = db.remove(0)     # doc 0 = chunks 0..3
+    assert gone == 4
+    res = db.search(vecs[:1], 4)
+    assert all(int(c) >= 4 for c in res[0].chunk_ids)
+
+
+def test_update_bumps_version_and_replaces():
+    db = make_db("flat", dim=32, capacity=1024)
+    _fill(db, n=64)
+    newv = _mk_vecs(2, 32, seed=7)
+    db.update(0, newv, [Chunk(-1, 0, "new text", version=1)] * 2)
+    res = db.search(newv[:1], 1)
+    c = db.get_chunk(int(res[0].chunk_ids[0]))
+    assert c.version == 1 and c.doc_id == 0
+
+
+def test_merge_topk_property():
+    """Merged top-k == top-k of the concatenation (random sweeps)."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        k = int(rng.integers(1, 8))
+        sa = rng.standard_normal((3, k)).astype(np.float32)
+        sb = rng.standard_normal((3, k)).astype(np.float32)
+        ia = rng.integers(0, 100, (3, k)).astype(np.int32)
+        ib = rng.integers(100, 200, (3, k)).astype(np.int32)
+        ms, mi = merge_topk(sa, ia, sb, ib, k)
+        alls = np.concatenate([sa, sb], axis=1)
+        expect = -np.sort(-alls, axis=1)[:, :k]
+        np.testing.assert_allclose(ms, expect)
+
+
+def test_capacity_overflow_raises():
+    db = make_db("flat", dim=8, capacity=16)
+    with pytest.raises(MemoryError):
+        db.insert(_mk_vecs(32, 8), _chunks(32))
+
+
+def test_stats_report_index_sizes():
+    db = make_db("ivf", "pq", dim=32, capacity=1024, nlist=8, pq_m=8)
+    _fill(db, n=256)
+    s = db.stats()
+    assert s["live"] == 256
+    assert s["index_bytes"] > 0
+    assert s["rebuilds"] >= 1

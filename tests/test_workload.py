@@ -1,0 +1,91 @@
+"""Workload generator: determinism, op mix, zipfian skew, update ground
+truth, corpus document properties."""
+import numpy as np
+import pytest
+
+from repro.workload.corpus import CorpusConfig, SyntheticCorpus
+from repro.workload.generator import WorkloadConfig, WorkloadGenerator
+
+
+def test_corpus_documents_deterministic():
+    c1 = SyntheticCorpus(CorpusConfig(n_docs=10, seed=42))
+    c2 = SyntheticCorpus(CorpusConfig(n_docs=10, seed=42))
+    for d in range(10):
+        assert c1.document(d) == c2.document(d)
+
+
+def test_corpus_facts_present_in_document():
+    c = SyntheticCorpus(CorpusConfig(n_docs=5, seed=0))
+    for d in range(5):
+        doc = c.document(d)
+        for fact in c.facts[d]:
+            assert fact.sentence() in doc
+
+
+@pytest.mark.parametrize("modality", ["text", "code", "pdf", "audio"])
+def test_modalities_preserve_facts(modality):
+    c = SyntheticCorpus(CorpusConfig(n_docs=3, seed=1, modality=modality))
+    for d in range(3):
+        doc = c.document(d)
+        assert any(f.value in doc for f in c.facts[d])
+
+
+def test_update_changes_fact_and_question_answers_it():
+    c = SyntheticCorpus(CorpusConfig(n_docs=4, seed=2))
+    rng = np.random.default_rng(0)
+    old = {f.attribute: f.value for f in c.facts[2]}
+    text, q, a = c.make_update(2, rng)
+    assert a in text
+    assert a not in old.values()
+    assert c.versions[2] == 1
+    attr = q.split("the ")[1].split(" of")[0]
+    assert old[attr] != a
+
+
+def test_stream_determinism():
+    c1 = SyntheticCorpus(CorpusConfig(n_docs=20, seed=0))
+    c2 = SyntheticCorpus(CorpusConfig(n_docs=20, seed=0))
+    cfg = WorkloadConfig(query_frac=0.6, update_frac=0.2, insert_frac=0.1,
+                         removal_frac=0.1, n_requests=50, seed=9)
+    r1 = [(r.op, r.doc_id, r.question) for r in
+          WorkloadGenerator(cfg, c1).requests()]
+    r2 = [(r.op, r.doc_id, r.question) for r in
+          WorkloadGenerator(cfg, c2).requests()]
+    assert r1 == r2
+
+
+def test_op_mix_fractions():
+    c = SyntheticCorpus(CorpusConfig(n_docs=50, seed=0))
+    cfg = WorkloadConfig(query_frac=0.5, update_frac=0.5, n_requests=400,
+                         seed=1)
+    ops = [r.op for r in WorkloadGenerator(cfg, c).requests()]
+    qf = ops.count("query") / len(ops)
+    assert 0.4 < qf < 0.6, qf
+
+
+def test_zipfian_concentrates_updates():
+    """Paper §5.5: zipfian updates touch fewer unique documents."""
+    def unique_targets(dist):
+        c = SyntheticCorpus(CorpusConfig(n_docs=200, seed=0))
+        cfg = WorkloadConfig(query_frac=0.0, update_frac=1.0,
+                             n_requests=200, seed=2, distribution=dist)
+        return len({r.doc_id for r in WorkloadGenerator(cfg, c).requests()})
+
+    assert unique_targets("zipfian") < 0.6 * unique_targets("uniform")
+
+
+def test_invalid_mix_rejected():
+    with pytest.raises(AssertionError):
+        WorkloadConfig(query_frac=0.5, update_frac=0.1)
+
+
+def test_update_refreshes_question_pool():
+    c = SyntheticCorpus(CorpusConfig(n_docs=10, seed=0))
+    cfg = WorkloadConfig(query_frac=0.0, update_frac=1.0, n_requests=20,
+                         seed=3)
+    gen = WorkloadGenerator(cfg, c)
+    reqs = list(gen.requests())
+    for r in reqs:
+        # every update's QA pair must be in the pool exactly once per doc
+        entries = [t for t in gen.question_pool if t[2] == r.doc_id]
+        assert len(entries) == 1
