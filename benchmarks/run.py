@@ -10,7 +10,8 @@ import traceback
 
 from benchmarks import (accuracy_eval, index_schemes, indexing_breakdown,
                         monitor_overhead, query_breakdown, resource_limits,
-                        resource_utilization, sensitivity, update_workload)
+                        resource_utilization, sensitivity, serving,
+                        update_workload)
 from benchmarks.common import emit
 
 MODULES = {
@@ -23,6 +24,7 @@ MODULES = {
     "sensitivity": sensitivity,               # Fig. 11
     "index_schemes": index_schemes,           # Fig. 12
     "monitor_overhead": monitor_overhead,     # §5.8
+    "serving": serving,                       # open/closed-loop QPS sweep
 }
 
 

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 gate: full unit suite + a fast serving-benchmark sanity run.
+# Usage: scripts/tier1.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== tier-1: serving benchmark smoke =="
+python -m benchmarks.serving --smoke > /dev/null
+
+echo "tier-1 OK"

@@ -138,12 +138,41 @@ def _pq_ivf_search(q, codes, codebook, live, cent, buckets, bucket_live,
 
 
 def merge_topk(scores_a, idx_a, scores_b, idx_b, k: int):
-    """Merge two top-k lists (used for hybrid main+flat and sharded search)."""
+    """Merge two top-k lists (used for hybrid main+flat and sharded search).
+
+    Output rows are sorted by descending score and deduplicated by id (the
+    best-scoring occurrence wins), so a chunk surfaced by both the main index
+    and the flat freshness buffer appears once.  Rows with fewer than ``k``
+    distinct valid ids are padded with ``(NEG, -1)``.
+    """
     scores = np.concatenate([scores_a, scores_b], axis=1)
     idx = np.concatenate([idx_a, idx_b], axis=1)
-    order = np.argsort(-scores, axis=1)[:, :k]
-    return (np.take_along_axis(scores, order, axis=1),
-            np.take_along_axis(idx, order, axis=1))
+    nq = scores.shape[0]
+    va, vb = idx_a[idx_a >= 0], idx_b[idx_b >= 0]
+    if not np.isin(va, vb).any():
+        # no id can repeat (within-list top-k ids are distinct; hybrid
+        # main/fresh slot sets are disjoint): vectorized merge
+        order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
+        return (np.take_along_axis(scores, order, axis=1),
+                np.take_along_axis(idx, order, axis=1))
+    out_s = np.full((nq, k), NEG, dtype=scores.dtype)
+    out_i = np.full((nq, k), -1, dtype=idx.dtype)
+    order = np.argsort(-scores, axis=1, kind="stable")
+    for r in range(nq):
+        seen = set()
+        j = 0
+        for c in order[r]:
+            i = int(idx[r, c])
+            if i >= 0:
+                if i in seen:
+                    continue
+                seen.add(i)
+            out_s[r, j] = scores[r, c]
+            out_i[r, j] = i
+            j += 1
+            if j == k:
+                break
+    return out_s, out_i
 
 
 # ---------------------------------------------------------------------------

@@ -9,12 +9,19 @@ intra-pod where ICI bandwidth is (DESIGN.md §6).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # AxisType landed after jax 0.4.37; older jax only has Auto semantics
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
 
 
 def make_mesh(shape, axes) -> Mesh:
-    axis_types = (AxisType.Auto,) * len(axes)
-    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=axis_types)
+    if AxisType is not None:
+        axis_types = (AxisType.Auto,) * len(axes)
+        return jax.make_mesh(tuple(shape), tuple(axes), axis_types=axis_types)
+    return jax.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

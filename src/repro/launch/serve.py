@@ -1,8 +1,15 @@
 """Serving driver: ``python -m repro.launch.serve --arch llama3_8b --smoke``.
 
 Runs the RAG pipeline end-to-end with the chosen architecture as generation
-backend: index a synthetic corpus, serve batched queries (prefill + decode
-against the KV cache), print throughput + TTFT/TPOT + quality metrics.
+backend.  Three drive modes:
+
+* ``sync``   — the original offline replay (one op at a time, back-to-back);
+* ``open``   — open-loop load generation (Poisson/bursty/uniform arrivals at
+               ``--target-qps``) through the continuous-batching executor;
+* ``closed`` — closed-loop with ``--concurrency`` outstanding requests.
+
+Open/closed modes print achieved vs offered QPS, p50/p95/p99 latency, queue
+wait, and goodput under ``--slo-ms``.
 """
 from __future__ import annotations
 
@@ -12,8 +19,10 @@ import time
 from repro import configs
 from repro.core.generator import ModelLLM
 from repro.core.pipeline import PipelineConfig, RAGPipeline
-from repro.metrics.quality import evaluate_traces
 from repro.monitor.monitor import MonitorConfig, ResourceMonitor
+from repro.serving.arrival import ArrivalConfig
+from repro.serving.batcher import BatchPolicy
+from repro.serving.harness import ServingConfig, ServingHarness
 from repro.workload.corpus import CorpusConfig, SyntheticCorpus
 from repro.workload.generator import WorkloadConfig
 from repro.workload.runner import run_workload
@@ -33,7 +42,26 @@ def main(argv=None):
                     choices=["uniform", "zipfian"])
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--monitor-out", default="")
+    # serving-mode flags
+    ap.add_argument("--mode", default="sync",
+                    choices=["sync", "open", "closed"])
+    ap.add_argument("--target-qps", type=float, default=20.0,
+                    help="offered load for --mode open")
+    ap.add_argument("--slo-ms", type=float, default=500.0)
+    ap.add_argument("--concurrency", type=int, default=4,
+                    help="in-flight cap for --mode closed")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "bursty", "uniform"])
+    ap.add_argument("--batch-timeout-ms", type=float, default=20.0,
+                    help="continuous-batching coalesce deadline")
+    ap.add_argument("--priority", default="fifo",
+                    choices=["fifo", "query_first", "mutation_first"])
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.target_qps <= 0:
+        ap.error("--target-qps must be > 0")
+    if args.concurrency < 1:
+        ap.error("--concurrency must be >= 1")
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))
@@ -53,13 +81,54 @@ def main(argv=None):
 
     wcfg = WorkloadConfig(
         query_frac=1.0 - args.update_frac, update_frac=args.update_frac,
-        distribution=args.distribution, n_requests=args.requests)
-    res = run_workload(pipe, corpus, wcfg, query_batch=args.batch)
-    print(f"served {args.requests} requests: {res.qps:.2f} QPS")
+        distribution=args.distribution, n_requests=args.requests,
+        seed=args.seed)
+
+    if args.mode == "sync":
+        res = run_workload(pipe, corpus, wcfg, query_batch=args.batch)
+        print(f"served {args.requests} requests: {res.qps:.2f} QPS")
+        print("quality:", {k: round(v, 3) for k, v in res.quality.items()})
+    else:
+        # warm the jit caches so compile time doesn't pollute the tail
+        pipe.query(["warmup query"])
+        pipe.traces.clear()
+        scfg = ServingConfig(
+            arrival=ArrivalConfig(
+                mode=args.mode, process=args.arrival,
+                target_qps=args.target_qps, n_requests=args.requests,
+                concurrency=args.concurrency, seed=args.seed),
+            policy=BatchPolicy(max_batch=args.batch,
+                               max_wait_s=args.batch_timeout_ms / 1e3,
+                               priority=args.priority),
+            slo_ms=args.slo_ms, evaluate=True)
+        harness = ServingHarness(pipe, corpus, wcfg, scfg)
+        monitor.add_gauges(harness.gauges())
+        res = harness.run()
+        s = res.summary
+        if args.mode == "open":
+            print(f"offered {s.get('offered_qps', 0.0):.2f} QPS "
+                  f"({args.arrival}), achieved {s['achieved_qps']:.2f} QPS")
+        else:
+            print(f"closed-loop concurrency={args.concurrency}: "
+                  f"achieved {s['achieved_qps']:.2f} QPS "
+                  f"(peak in-flight {res.peak_in_flight})")
+        # .get defaults: a query-free workload (--update-frac 1.0) has no
+        # latency percentiles to report
+        print(f"latency p50/p95/p99 (ms): {s.get('p50_latency_ms', 0.0):.1f} / "
+              f"{s.get('p95_latency_ms', 0.0):.1f} / "
+              f"{s.get('p99_latency_ms', 0.0):.1f}")
+        print(f"queue wait p50/p95 (ms): {s.get('p50_queue_wait_ms', 0.0):.1f} / "
+              f"{s.get('p95_queue_wait_ms', 0.0):.1f}; "
+              f"mean batch {s.get('mean_batch_size', 1.0):.2f} "
+              f"(peak queue depth {res.peak_queue_depth})")
+        print(f"SLO {args.slo_ms:.0f} ms: attainment "
+              f"{s.get('slo_attainment', 0.0):.3f}, goodput "
+              f"{s.get('goodput_qps', 0.0):.2f} QPS")
+        print("quality:", {k: round(v, 3) for k, v in res.quality.items()})
+
     print("gen stats:", {k: round(v, 4) for k, v in llm.stats.summary().items()})
     print("stage breakdown (s):",
           {k: round(v, 3) for k, v in pipe.breakdown().items()})
-    print("quality:", {k: round(v, 3) for k, v in res.quality.items()})
     monitor.stop()
 
 

@@ -136,6 +136,12 @@ class ResourceMonitor:
     def add_gauge(self, name: str, fn: Callable[[], float]) -> None:
         self.callbacks[name] = fn
 
+    def add_gauges(self, gauges: Dict[str, Callable[[], float]]) -> None:
+        """Register a family of gauges at once (e.g. the serving harness's
+        queue-depth / in-flight / batch-size probes)."""
+        for name, fn in gauges.items():
+            self.add_gauge(name, fn)
+
     def _buf(self, name: str) -> RingBuffer:
         if name not in self.buffers:
             self.buffers[name] = RingBuffer(self.cfg.ring_capacity)

@@ -1,0 +1,14 @@
+"""Concurrent serving layer: load generation, continuous batching, latency
+accounting (the "serving benchmark" regime on top of the offline replay in
+``repro.workload.runner``)."""
+from repro.serving.accounting import LatencyAccountant, RequestRecord, percentile
+from repro.serving.arrival import ArrivalConfig, arrival_times
+from repro.serving.batcher import BatchPolicy, ContinuousBatcher, Submission
+from repro.serving.harness import ServingConfig, ServingHarness, ServingResult
+
+__all__ = [
+    "ArrivalConfig", "arrival_times",
+    "BatchPolicy", "ContinuousBatcher", "Submission",
+    "LatencyAccountant", "RequestRecord", "percentile",
+    "ServingConfig", "ServingHarness", "ServingResult",
+]

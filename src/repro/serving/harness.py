@@ -1,0 +1,221 @@
+"""Serving harness: arrival schedule → continuous batcher → RAGPipeline.
+
+Open-loop mode replays the configured arrival process in real time on an
+injection thread while a single executor thread drains the batcher; queue
+depth and in-flight counts evolve exactly as they would behind a real
+endpoint (the pipeline itself is single-threaded, as one model replica is).
+Closed-loop mode runs ``concurrency`` client threads that each keep one
+request outstanding.
+
+The harness exposes ``gauges()`` (queue depth / in-flight / peak batch size)
+for ``ResourceMonitor.add_gauges`` so serving dynamics land in the same
+time-series traces as RSS/CPU/device memory.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional
+
+from repro.core.pipeline import RAGPipeline
+from repro.metrics.quality import evaluate_traces
+from repro.serving.accounting import LatencyAccountant, RequestRecord
+from repro.serving.arrival import ArrivalConfig, arrival_times
+from repro.serving.batcher import BatchPolicy, ContinuousBatcher, Submission
+from repro.workload.corpus import SyntheticCorpus
+from repro.workload.generator import Request, WorkloadConfig, WorkloadGenerator
+from repro.workload.runner import gold_chunks_for
+
+
+@dataclass
+class ServingConfig:
+    arrival: ArrivalConfig = field(default_factory=ArrivalConfig)
+    policy: BatchPolicy = field(default_factory=BatchPolicy)
+    slo_ms: float = 500.0
+    evaluate: bool = False
+    time_scale: float = 1.0   # <1 compresses the schedule (tests/smoke)
+
+
+@dataclass
+class ServingResult:
+    summary: Dict[str, float]
+    records: List[RequestRecord]
+    batch_sizes: List[int]
+    peak_in_flight: int
+    peak_queue_depth: int
+    quality: Dict[str, float] = field(default_factory=dict)
+
+
+class ServingHarness:
+    def __init__(self, pipeline: RAGPipeline, corpus: SyntheticCorpus,
+                 wcfg: WorkloadConfig, scfg: ServingConfig):
+        self.pipeline = pipeline
+        self.corpus = corpus
+        self.wcfg = wcfg
+        self.scfg = scfg
+        self.accountant = LatencyAccountant(slo_ms=scfg.slo_ms)
+        self.batcher = ContinuousBatcher(scfg.policy)
+        self.batch_sizes: List[int] = []
+        self._in_flight = 0
+        self.peak_in_flight = 0
+        self._if_lock = threading.Lock()
+        self._next_id = 0
+
+    # -- monitor integration ----------------------------------------------
+
+    def in_flight(self) -> int:
+        with self._if_lock:
+            return self._in_flight
+
+    def gauges(self) -> Dict[str, Callable[[], float]]:
+        return {
+            "serving_queue_depth": lambda: float(self.batcher.depth()),
+            "serving_in_flight": lambda: float(self.in_flight()),
+            "serving_last_batch": lambda: float(
+                self.batch_sizes[-1] if self.batch_sizes else 0),
+        }
+
+    # -- submission --------------------------------------------------------
+
+    def _submit(self, req: Request) -> Submission:
+        now = time.perf_counter()
+        with self._if_lock:
+            rec = RequestRecord(req_id=self._next_id, op=req.op, arrival_s=now)
+            self._next_id += 1
+            self._in_flight += 1
+            self.peak_in_flight = max(self.peak_in_flight, self._in_flight)
+        sub = Submission(request=req, record=rec)
+        self.batcher.submit(sub)
+        return sub
+
+    def _finish(self, sub: Submission, ok: bool,
+                err: Optional[BaseException] = None) -> None:
+        sub.record.end_s = time.perf_counter()
+        sub.record.ok = ok
+        sub.error = err
+        self.accountant.observe(sub.record)
+        with self._if_lock:
+            self._in_flight -= 1
+        sub.done.set()
+
+    # -- execution ---------------------------------------------------------
+
+    def _execute_batch(self, batch: List[Submission]) -> None:
+        t_start = time.perf_counter()
+        for sub in batch:
+            sub.record.start_s = t_start
+            sub.record.batch_size = len(batch)
+        self.batch_sizes.append(len(batch))
+        stage_before = dict(self.pipeline.timer.totals)
+        try:
+            if batch[0].request.op == "query":
+                reqs = [s.request for s in batch]
+                golds = [gold_chunks_for(self.pipeline.db, r.gold_doc_id,
+                                         r.answer) for r in reqs]
+                self.pipeline.query([r.question for r in reqs],
+                                    ground_truth=[r.answer for r in reqs],
+                                    gold_chunks=golds)
+            else:
+                req = batch[0].request
+                if req.op == "insert":
+                    self.pipeline.index_documents([(req.doc_id, req.text)],
+                                                  build=False)
+                elif req.op == "update":
+                    # version captured at stream-generation time: the whole
+                    # stream is materialized before execution, so reading
+                    # corpus.versions here would see the final count
+                    self.pipeline.update_document(req.doc_id, req.text,
+                                                  version=req.version or 1)
+                elif req.op == "removal":
+                    self.pipeline.remove_document(req.doc_id)
+        except Exception as e:                      # noqa: BLE001
+            for sub in batch:
+                self._finish(sub, ok=False, err=e)
+            return
+        stage_after = self.pipeline.timer.totals
+        share = {k: (stage_after.get(k, 0.0) - stage_before.get(k, 0.0))
+                 / len(batch)
+                 for k in stage_after
+                 if stage_after.get(k, 0.0) > stage_before.get(k, 0.0)}
+        for sub in batch:
+            sub.record.stages = dict(share)
+            self._finish(sub, ok=True)
+
+    def _executor_loop(self) -> None:
+        while True:
+            batch = self.batcher.get_batch()
+            if batch is None:
+                return
+            self._execute_batch(batch)
+
+    # -- drive modes -------------------------------------------------------
+
+    def _materialize(self) -> List[Request]:
+        gen = WorkloadGenerator(self.wcfg, self.corpus)
+        return list(gen.requests())
+
+    def run(self) -> ServingResult:
+        acfg = self.scfg.arrival
+        requests = self._materialize()
+        executor = threading.Thread(target=self._executor_loop,
+                                    name="ragperf-serving-executor")
+        executor.start()
+        offered: Optional[float] = None
+        try:
+            if acfg.mode == "open":
+                offered = acfg.target_qps / max(self.scfg.time_scale, 1e-9)
+                self._drive_open(requests)
+            else:
+                self._drive_closed(requests)
+        finally:
+            self.batcher.close()
+            executor.join()
+        summary = self.accountant.summary(offered_qps=offered)
+        summary["peak_in_flight"] = float(self.peak_in_flight)
+        summary["peak_queue_depth"] = float(self.batcher.peak_depth)
+        if self.batch_sizes:
+            summary["mean_batch_size"] = (sum(self.batch_sizes)
+                                          / len(self.batch_sizes))
+            summary["max_batch_size"] = float(max(self.batch_sizes))
+        quality: Dict[str, float] = {}
+        if self.scfg.evaluate and self.pipeline.traces:
+            quality = evaluate_traces(self.pipeline.traces, self.pipeline.db)
+        return ServingResult(summary=summary,
+                             records=list(self.accountant.records),
+                             batch_sizes=list(self.batch_sizes),
+                             peak_in_flight=self.peak_in_flight,
+                             peak_queue_depth=self.batcher.peak_depth,
+                             quality=quality)
+
+    def _drive_open(self, requests: List[Request]) -> None:
+        acfg = self.scfg.arrival
+        times = arrival_times(acfg) * self.scfg.time_scale
+        t0 = time.perf_counter()
+        for req, t_arr in zip(requests, times):
+            delay = (t0 + t_arr) - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            self._submit(req)
+
+    def _drive_closed(self, requests: List[Request]) -> None:
+        acfg = self.scfg.arrival
+        it: Iterator[Request] = iter(requests)
+        it_lock = threading.Lock()
+
+        def client() -> None:
+            while True:
+                with it_lock:
+                    req = next(it, None)
+                if req is None:
+                    return
+                sub = self._submit(req)
+                sub.done.wait()
+
+        clients = [threading.Thread(target=client,
+                                    name=f"ragperf-serving-client-{i}")
+                   for i in range(acfg.concurrency)]
+        for c in clients:
+            c.start()
+        for c in clients:
+            c.join()

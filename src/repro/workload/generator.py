@@ -30,6 +30,7 @@ class Request:
     question: str = ""             # query payload
     answer: str = ""               # ground truth for queries
     gold_doc_id: int = -1          # document containing the answer
+    version: int = 0               # document version after an update op
 
 
 @dataclass
@@ -113,7 +114,8 @@ class WorkloadGenerator:
                                       if t[2] != doc_id]
                 self.question_pool.append((q, a, doc_id))
                 yield Request("update", step, doc_id=doc_id, text=text,
-                              question=q, answer=a, gold_doc_id=doc_id)
+                              question=q, answer=a, gold_doc_id=doc_id,
+                              version=self.corpus.versions[doc_id])
             else:
                 doc_id = self._pick_doc()
                 if doc_id in removed:

@@ -73,7 +73,8 @@ def run_workload(pipeline: RAGPipeline, corpus: SyntheticCorpus,
             pipeline.index_documents([(req.doc_id, req.text)], build=False)
         elif req.op == "update":
             pipeline.update_document(req.doc_id, req.text,
-                                     version=corpus.versions[req.doc_id])
+                                     version=req.version
+                                     or corpus.versions[req.doc_id])
         elif req.op == "removal":
             pipeline.remove_document(req.doc_id)
         dt = time.perf_counter() - t0

@@ -1,0 +1,254 @@
+"""Serving layer: arrival-process determinism, continuous-batching
+invariants (batch cap, closed-loop in-flight cap), percentile math,
+priority policies, and SLO accounting."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import PipelineConfig, RAGPipeline
+from repro.serving.accounting import (LatencyAccountant, RequestRecord,
+                                      percentile)
+from repro.serving.arrival import ArrivalConfig, arrival_times
+from repro.serving.batcher import BatchPolicy, ContinuousBatcher, Submission
+from repro.serving.harness import ServingConfig, ServingHarness
+from repro.workload.corpus import CorpusConfig, SyntheticCorpus
+from repro.workload.generator import Request, WorkloadConfig
+
+
+# -- arrival processes -------------------------------------------------------
+
+
+def test_poisson_arrivals_seed_deterministic():
+    a = arrival_times(ArrivalConfig(process="poisson", target_qps=50,
+                                    n_requests=500, seed=3))
+    b = arrival_times(ArrivalConfig(process="poisson", target_qps=50,
+                                    n_requests=500, seed=3))
+    c = arrival_times(ArrivalConfig(process="poisson", target_qps=50,
+                                    n_requests=500, seed=4))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+@pytest.mark.parametrize("process", ["poisson", "bursty", "uniform"])
+def test_arrivals_nondecreasing_and_rate(process):
+    cfg = ArrivalConfig(process=process, target_qps=100, n_requests=4000,
+                        seed=0)
+    t = arrival_times(cfg)
+    assert len(t) == 4000
+    assert (np.diff(t) >= 0).all()
+    rate = (len(t) - 1) / t[-1]
+    assert 80 < rate < 125, f"{process}: long-run rate {rate:.1f}"
+
+
+def test_uniform_arrivals_exact_spacing():
+    t = arrival_times(ArrivalConfig(process="uniform", target_qps=20,
+                                    n_requests=10))
+    np.testing.assert_allclose(np.diff(t), 0.05)
+
+
+def test_bursty_arrivals_have_silent_gaps():
+    cfg = ArrivalConfig(process="bursty", target_qps=50, n_requests=2000,
+                        burst_cycle_s=1.0, burst_duty=0.2, seed=1)
+    t = arrival_times(cfg)
+    # arrivals only inside the on-window of each cycle
+    phase = t % cfg.burst_cycle_s
+    assert (phase <= cfg.burst_duty * cfg.burst_cycle_s + 1e-9).all()
+
+
+# -- percentile / accounting -------------------------------------------------
+
+
+def test_percentile_matches_numpy():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 5, 100, 999):
+        xs = rng.standard_normal(n).tolist()
+        for q in (0, 25, 50, 90, 95, 99, 100):
+            assert percentile(xs, q) == pytest.approx(
+                float(np.percentile(xs, q)), rel=1e-12, abs=1e-12)
+
+
+def test_percentile_empty_is_zero():
+    assert percentile([], 99) == 0.0
+
+
+def test_accountant_slo_goodput_on_known_trace():
+    acc = LatencyAccountant(slo_ms=120.0)
+    # 10 queries, latencies 50ms, 100ms, ..., 500ms: two meet the 120ms SLO
+    for i in range(10):
+        acc.observe(RequestRecord(req_id=i, op="query", arrival_s=0.2 * i,
+                                  start_s=0.2 * i,
+                                  end_s=0.2 * i + 0.05 * (i + 1)))
+    s = acc.summary(offered_qps=5.0)
+    assert s["n_queries"] == 10
+    met = sum(1 for i in range(10) if 50 * (i + 1) <= 120)
+    assert s["slo_attainment"] == pytest.approx(met / 10)
+    wall = s["wall_s"]
+    assert s["goodput_qps"] == pytest.approx(met / wall)
+    assert s["offered_qps"] == 5.0
+    lat = [50.0 * (i + 1) for i in range(10)]
+    assert s["p50_latency_ms"] == pytest.approx(float(np.percentile(lat, 50)))
+    assert s["p99_latency_ms"] == pytest.approx(float(np.percentile(lat, 99)))
+
+
+# -- batcher -----------------------------------------------------------------
+
+
+def _sub(op, qid=0):
+    return Submission(request=Request(op, step=qid, question=f"q{qid}"),
+                      record=RequestRecord(req_id=qid, op=op, arrival_s=0.0))
+
+
+def _drain(batcher):
+    out = []
+    while True:
+        b = batcher.get_batch()
+        if b is None:
+            return out
+        out.append(b)
+
+
+def test_batcher_respects_max_batch():
+    bt = ContinuousBatcher(BatchPolicy(max_batch=3, max_wait_s=0.0))
+    for i in range(10):
+        bt.submit(_sub("query", i))
+    bt.close()
+    batches = _drain(bt)
+    assert [len(b) for b in batches] == [3, 3, 3, 1]
+
+
+def test_batcher_fifo_mutation_barrier():
+    bt = ContinuousBatcher(BatchPolicy(max_batch=8, max_wait_s=0.0,
+                                       priority="fifo"))
+    bt.submit(_sub("query", 0))
+    bt.submit(_sub("update", 1))
+    bt.submit(_sub("query", 2))
+    bt.close()
+    ops = [[s.request.op for s in b] for b in _drain(bt)]
+    assert ops == [["query"], ["update"], ["query"]]
+
+
+def test_batcher_mutation_first_preempts_reads():
+    bt = ContinuousBatcher(BatchPolicy(max_batch=8, max_wait_s=0.0,
+                                       priority="mutation_first"))
+    bt.submit(_sub("query", 0))
+    bt.submit(_sub("query", 1))
+    bt.submit(_sub("update", 2))
+    bt.close()
+    ops = [[s.request.op for s in b] for b in _drain(bt)]
+    assert ops[0] == ["update"]
+    assert ops[1] == ["query", "query"]
+
+
+def test_batcher_query_first_defers_writes():
+    bt = ContinuousBatcher(BatchPolicy(max_batch=8, max_wait_s=0.0,
+                                       priority="query_first"))
+    bt.submit(_sub("update", 0))
+    bt.submit(_sub("query", 1))
+    bt.submit(_sub("query", 2))
+    bt.close()
+    ops = [[s.request.op for s in b] for b in _drain(bt)]
+    assert ops[0] == ["query", "query"]
+    assert ops[1] == ["update"]
+
+
+def test_batcher_deadline_triggers_partial_batch():
+    bt = ContinuousBatcher(BatchPolicy(max_batch=64, max_wait_s=0.01))
+    bt.submit(_sub("query", 0))
+    bt.submit(_sub("query", 1))
+    t0 = time.perf_counter()
+    batch = bt.get_batch()          # not full: must release at the deadline
+    waited = time.perf_counter() - t0
+    assert [s.record.req_id for s in batch] == [0, 1]
+    assert waited < 1.0
+    bt.close()
+
+
+# -- harness end-to-end ------------------------------------------------------
+
+
+def _mk_harness(mode="open", qps=300.0, n_requests=40, concurrency=3,
+                max_batch=4, update_frac=0.0, seed=0, **policy_kw):
+    corpus = SyntheticCorpus(CorpusConfig(n_docs=16, seed=seed))
+    pipe = RAGPipeline(PipelineConfig(index_type="flat", capacity=1 << 13,
+                                      retrieve_k=4, rerank_k=2))
+    pipe.index_documents(corpus.all_documents())
+    pipe.query(["warmup"])
+    pipe.traces.clear()
+    wcfg = WorkloadConfig(query_frac=1.0 - update_frac,
+                          update_frac=update_frac,
+                          n_requests=n_requests, seed=seed)
+    scfg = ServingConfig(
+        arrival=ArrivalConfig(mode=mode, process="poisson", target_qps=qps,
+                              n_requests=n_requests, concurrency=concurrency,
+                              seed=seed),
+        policy=BatchPolicy(max_batch=max_batch, max_wait_s=0.005,
+                           **policy_kw),
+        slo_ms=1000.0)
+    return ServingHarness(pipe, corpus, wcfg, scfg)
+
+
+def test_open_loop_batches_never_exceed_max():
+    h = _mk_harness(mode="open", qps=500.0, max_batch=4, n_requests=48)
+    res = h.run()
+    assert res.batch_sizes, "no batches executed"
+    assert max(res.batch_sizes) <= 4
+    assert max(res.batch_sizes) >= 2, \
+        "overload at 500 QPS should coalesce some batches"
+    assert res.summary["n_requests"] == 48
+
+
+def test_closed_loop_in_flight_bounded_by_concurrency():
+    h = _mk_harness(mode="closed", concurrency=3, n_requests=30)
+    res = h.run()
+    assert res.peak_in_flight <= 3
+    assert res.summary["n_requests"] == 30
+    assert res.summary["achieved_qps"] > 0
+
+
+def test_open_loop_all_requests_accounted_with_mutations():
+    h = _mk_harness(mode="open", qps=400.0, n_requests=40, update_frac=0.25,
+                    seed=2)
+    res = h.run()
+    ops = {r.op for r in res.records}
+    assert "update" in ops and "query" in ops
+    assert all(r.ok for r in res.records)
+    assert all(r.end_s >= r.start_s >= r.arrival_s for r in res.records)
+    assert res.summary["n_mutations"] > 0
+    # mutations always execute as singleton batches
+    assert all(r.batch_size == 1 for r in res.records if r.op != "query")
+
+
+def test_harness_gauges_report_floats():
+    h = _mk_harness(n_requests=8)
+    g = h.gauges()
+    assert set(g) == {"serving_queue_depth", "serving_in_flight",
+                      "serving_last_batch"}
+    for fn in g.values():
+        assert isinstance(fn(), float)
+    h.run()
+
+
+def test_update_versions_match_per_step_not_final_count():
+    """Materializing the stream up front must not smear each document's
+    final version count over all of its update ops."""
+    h = _mk_harness(mode="open", qps=1000.0, n_requests=40, update_frac=1.0,
+                    seed=3)
+    reqs = h._materialize()
+    per_doc = {}
+    for r in reqs:
+        per_doc.setdefault(r.doc_id, []).append(r.version)
+    assert any(len(v) > 1 for v in per_doc.values()), \
+        "seed must update some doc more than once"
+    for doc_id, versions in per_doc.items():
+        assert versions == list(range(versions[0], versions[0] + len(versions)))
+
+
+def test_queue_wait_separates_from_service_time():
+    """Under heavy overload the p95 queue wait must dominate service time."""
+    h = _mk_harness(mode="open", qps=2000.0, n_requests=60, max_batch=2)
+    res = h.run()
+    s = res.summary
+    assert s["p95_queue_wait_ms"] > 0
+    assert s["mean_latency_ms"] >= s["mean_service_ms"]

@@ -119,18 +119,83 @@ def test_update_bumps_version_and_replaces():
 
 
 def test_merge_topk_property():
-    """Merged top-k == top-k of the concatenation (random sweeps)."""
+    """With distinct ids, merged top-k == top-k of the concatenation."""
     rng = np.random.default_rng(0)
     for _ in range(20):
         k = int(rng.integers(1, 8))
         sa = rng.standard_normal((3, k)).astype(np.float32)
         sb = rng.standard_normal((3, k)).astype(np.float32)
-        ia = rng.integers(0, 100, (3, k)).astype(np.int32)
-        ib = rng.integers(100, 200, (3, k)).astype(np.int32)
+        # ids unique per row (and across the two lists), as in hybrid search
+        perm = np.stack([rng.permutation(200) for _ in range(3)])
+        ia = perm[:, :k].astype(np.int32)
+        ib = np.stack([rng.permutation(200)[:k] + 200 for _ in range(3)]) \
+            .astype(np.int32)
         ms, mi = merge_topk(sa, ia, sb, ib, k)
         alls = np.concatenate([sa, sb], axis=1)
         expect = -np.sort(-alls, axis=1)[:, :k]
         np.testing.assert_allclose(ms, expect)
+
+
+def test_merge_topk_sorted_descending():
+    rng = np.random.default_rng(1)
+    sa = rng.standard_normal((4, 6)).astype(np.float32)
+    sb = rng.standard_normal((4, 6)).astype(np.float32)
+    ia = rng.integers(0, 1000, (4, 6)).astype(np.int32)
+    ib = rng.integers(0, 1000, (4, 6)).astype(np.int32)
+    ms, _ = merge_topk(sa, ia, sb, ib, 6)
+    assert (np.diff(ms, axis=1) <= 1e-7).all(), "rows must be sorted desc"
+
+
+def test_merge_topk_dedups_keeping_best_score():
+    """The same id in both lists must appear once, at its best score."""
+    sa = np.array([[0.9, 0.5]], np.float32)
+    ia = np.array([[7, 3]], np.int32)
+    sb = np.array([[0.8, 0.4]], np.float32)
+    ib = np.array([[7, 9]], np.int32)          # id 7 duplicated across lists
+    ms, mi = merge_topk(sa, ia, sb, ib, 4)
+    ids = [int(i) for i in mi[0] if i >= 0]
+    assert ids.count(7) == 1
+    assert ids == [7, 3, 9]
+    np.testing.assert_allclose(ms[0][:3], [0.9, 0.5, 0.4])
+    assert int(mi[0][3]) == -1                  # padded tail
+
+
+def test_hybrid_search_results_have_no_duplicate_ids():
+    db = make_db("ivf", dim=32, capacity=2048, nlist=8, nprobe=8,
+                 flat_capacity=512)
+    vecs = _fill(db, n=256)
+    db.insert(_mk_vecs(32, 32, seed=5),
+              [Chunk(-1, 600 + i, "fresh") for i in range(32)])
+    res = db.search(vecs[:40], 10)
+    for r in res:
+        ids = [int(c) for c in r.chunk_ids if c >= 0]
+        assert len(ids) == len(set(ids)), ids
+
+
+@pytest.mark.parametrize("quant,floor", [("sq8", 0.9), ("pq", 0.6)])
+def test_quantization_parity_vs_flat_ground_truth(quant, floor):
+    """Recall@10 of quantized search vs exact flat top-10 on held-out
+    queries (fixed seed) must stay above a per-scheme floor."""
+    dim, n, k = 32, 768, 10
+    vecs = _mk_vecs(n, dim, seed=11)
+    queries = _mk_vecs(64, dim, seed=12)       # held-out (not stored rows)
+
+    exact = make_db("flat", dim=dim, capacity=2048, use_hybrid=False)
+    exact.insert(vecs, _chunks(n))
+    exact.build_index()
+    truth = [set(int(c) for c in r.chunk_ids if c >= 0)
+             for r in exact.search(queries, k)]
+
+    idx = "flat" if quant == "sq8" else "ivf"
+    qdb = make_db(idx, quant, dim=dim, capacity=2048, nlist=8, nprobe=8,
+                  pq_m=8, use_hybrid=False)
+    qdb.insert(vecs, _chunks(n))
+    qdb.build_index()
+    got = qdb.search(queries, k)
+    recall = np.mean([len(truth[i] & {int(c) for c in got[i].chunk_ids
+                                      if c >= 0}) / k
+                      for i in range(len(queries))])
+    assert recall >= floor, f"{quant} recall@{k} vs flat: {recall:.3f}"
 
 
 def test_capacity_overflow_raises():
