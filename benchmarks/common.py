@@ -4,15 +4,29 @@ Every benchmark module exposes ``run(scale) -> list[dict]`` rows and prints
 them as ``benchmark,metric,value`` CSV.  ``scale`` shrinks corpus/request
 counts so the full suite stays CPU-friendly; the shapes of the curves (the
 paper's findings) are preserved.
+
+All benchmarks construct pipelines through one helper: ``default_spec``
+maps the shared benchmark defaults (+ per-benchmark overrides in legacy
+``PipelineConfig`` knob names) onto a declarative ``PipelineSpec``, and
+``build_pipeline`` builds it via the component registry — the same path the
+serving CLI uses.
 """
 from __future__ import annotations
 
 import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
+from repro.core.interfaces import BaseLLM
 from repro.core.pipeline import PipelineConfig, RAGPipeline
+from repro.core.registry import build
+from repro.core.spec import PipelineSpec
 from repro.workload.corpus import CorpusConfig, SyntheticCorpus
+
+# the one place the ad-hoc per-benchmark PipelineConfig soup lives now
+BENCH_DEFAULTS = dict(
+    embedder="hash", index_type="ivf", nlist=16, nprobe=8,
+    capacity=1 << 15, retrieve_k=8, rerank_k=3, flat_capacity=1024)
 
 
 def emit(rows: List[Dict]) -> None:
@@ -32,13 +46,24 @@ def make_corpus(n_docs: int, modality: str = "text", seed: int = 0
                                         seed=seed))
 
 
-def build_pipeline(corpus: SyntheticCorpus, **overrides) -> RAGPipeline:
-    cfg = PipelineConfig(**{
-        "embedder": "hash", "index_type": "ivf", "nlist": 16, "nprobe": 8,
-        "capacity": 1 << 15, "retrieve_k": 8, "rerank_k": 3,
-        "flat_capacity": 1024, **overrides})
-    pipe = RAGPipeline(cfg)
-    pipe.index_documents(corpus.all_documents())
+def default_spec(**overrides) -> PipelineSpec:
+    """Benchmark defaults + legacy-knob overrides, as a ``PipelineSpec``."""
+    cfg = PipelineConfig(**{**BENCH_DEFAULTS, **overrides})
+    return PipelineSpec.from_config(cfg)
+
+
+def build_pipeline(corpus: Optional[SyntheticCorpus] = None,
+                   llm: Optional[BaseLLM] = None, index: bool = True,
+                   **overrides) -> RAGPipeline:
+    """Build (and by default index) the shared benchmark pipeline.
+
+    ``llm`` substitutes a pre-built generation backend (benchmarks share one
+    expensive model across configs); ``overrides`` are legacy
+    ``PipelineConfig`` knobs applied on top of ``BENCH_DEFAULTS``.
+    """
+    pipe = build(default_spec(**overrides), llm=llm)
+    if corpus is not None and index:
+        pipe.index_documents(corpus.all_documents())
     return pipe
 
 

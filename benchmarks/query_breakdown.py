@@ -7,7 +7,6 @@ import numpy as np
 from benchmarks.common import build_pipeline, emit, make_corpus
 from repro import configs
 from repro.core.generator import ModelLLM
-from repro.core.pipeline import PipelineConfig, RAGPipeline
 
 
 def run(scale: float = 1.0):
@@ -39,8 +38,10 @@ def run(scale: float = 1.0):
     for arch in ("llama3_8b", "qwen3_moe_30b_a3b"):
         llm = ModelLLM(configs.get_smoke(arch), max_prompt=64, max_new=4,
                        batch_size=4)
-        pipe = RAGPipeline(PipelineConfig(capacity=1 << 14), llm=llm)
-        pipe.index_documents(corpus.all_documents())
+        # explicit overrides keep this axis on its historical config (bare
+        # PipelineConfig defaults), not the shared BENCH_DEFAULTS
+        pipe = build_pipeline(corpus, llm=llm, capacity=1 << 14, nlist=64,
+                              retrieve_k=16, rerank_k=4, flat_capacity=4096)
         pipe.query(questions[:4])
         bd = pipe.breakdown()
         gen = bd.get("generation", 0.0)

@@ -2,10 +2,7 @@
 the decoupled monitor while indexing + querying run."""
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import emit, make_corpus
-from repro.core.pipeline import PipelineConfig, RAGPipeline
+from benchmarks.common import build_pipeline, emit, make_corpus
 from repro.monitor.monitor import MonitorConfig, ResourceMonitor
 
 
@@ -13,7 +10,10 @@ def run(scale: float = 1.0):
     n_docs = max(int(48 * scale), 8)
     corpus = make_corpus(n_docs)
     mon = ResourceMonitor(MonitorConfig(interval_s=0.02)).start()
-    pipe = RAGPipeline(PipelineConfig(capacity=1 << 15))
+    # explicit overrides keep the trace on its historical config (bare
+    # PipelineConfig defaults), not the shared BENCH_DEFAULTS
+    pipe = build_pipeline(index=False, capacity=1 << 15, nlist=64,
+                          retrieve_k=16, rerank_k=4, flat_capacity=4096)
     mon.add_gauge("db_live", lambda: pipe.db.stats()["live"])
     pipe.index_documents(corpus.all_documents())
     questions = [f"what is the {corpus.facts[d][0].attribute} of "

@@ -11,7 +11,7 @@ import traceback
 from benchmarks import (accuracy_eval, index_schemes, indexing_breakdown,
                         monitor_overhead, query_breakdown, resource_limits,
                         resource_utilization, sensitivity, serving,
-                        update_workload)
+                        stage_pipeline, update_workload)
 from benchmarks.common import emit
 
 MODULES = {
@@ -25,6 +25,7 @@ MODULES = {
     "index_schemes": index_schemes,           # Fig. 12
     "monitor_overhead": monitor_overhead,     # §5.8
     "serving": serving,                       # open/closed-loop QPS sweep
+    "stage_pipeline": stage_pipeline,         # lock-step vs pipelined stages
 }
 
 

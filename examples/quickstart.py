@@ -1,9 +1,11 @@
-"""RAGPerf quickstart: build a pipeline, index a corpus, benchmark a mixed
-query/update workload, print performance + quality metrics.
+"""RAGPerf quickstart: declare a pipeline as a PipelineSpec, build it via
+the component registry, index a corpus, benchmark a mixed query/update
+workload, print performance + quality metrics.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core.pipeline import PipelineConfig, RAGPipeline
+from repro.core.registry import build
+from repro.core.spec import PipelineSpec, StageSpec
 from repro.monitor.monitor import MonitorConfig, ResourceMonitor
 from repro.workload.corpus import CorpusConfig, SyntheticCorpus
 from repro.workload.generator import WorkloadConfig
@@ -14,15 +16,22 @@ def main():
     # 1. a knowledge corpus (synthetic wiki-style with known facts)
     corpus = SyntheticCorpus(CorpusConfig(n_docs=64, modality="text"))
 
-    # 2. a configurable pipeline: every knob from the paper's §3.3
-    pipe = RAGPipeline(PipelineConfig(
-        embedder="hash", embed_dim=384,
-        chunk_method="separator", chunk_size=512,
-        index_type="ivf", nlist=16, nprobe=8, quant="none",
-        use_hybrid=True, flat_capacity=512,
-        reranker="overlap", retrieve_k=8, rerank_k=3,
-        llm="extractive",
-    ))
+    # 2. a declarative pipeline spec: each stage names a registered
+    #    component + its options (every knob from the paper's §3.3).
+    #    The same spec serializes to JSON — see examples/specs/.
+    spec = PipelineSpec(
+        embedder=StageSpec("hash", {"dim": 384}),
+        chunker=StageSpec("separator", {"size": 512}),
+        vectordb=StageSpec("jax", {"index_type": "ivf", "nlist": 16,
+                                   "nprobe": 8, "quant": "none",
+                                   "use_hybrid": True,
+                                   "flat_capacity": 512}),
+        reranker=StageSpec("overlap"),
+        llm=StageSpec("extractive"),
+        retrieve_k=8, rerank_k=3,
+    )
+    pipe = build(spec)
+    print("spec:", spec.to_json(indent=None))
 
     # 3. decoupled low-overhead monitor (paper §3.4)
     monitor = ResourceMonitor(MonitorConfig(interval_s=0.05)).start()
@@ -40,6 +49,9 @@ def main():
     print(f"\nthroughput: {res.qps:.1f} requests/s")
     print("stage breakdown (s):",
           {k: round(v, 3) for k, v in pipe.breakdown().items()})
+    print("per-request stage latency (ms):",
+          {k: round(v * 1e3, 2)
+           for k, v in pipe.traces[-1].latency_s.items()})
     print("quality:", {k: round(v, 3) for k, v in res.quality.items()})
     print("db stats:", {k: round(v, 1) for k, v in pipe.db_stats().items()
                         if not k.endswith("_s")})

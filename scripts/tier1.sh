@@ -11,4 +11,8 @@ python -m pytest -x -q
 echo "== tier-1: serving benchmark smoke =="
 python -m benchmarks.serving --smoke > /dev/null
 
+echo "== tier-1: spec-built serving smoke =="
+python -m repro.launch.serve --config examples/specs/smoke.json \
+    --mode open --requests 20 > /dev/null
+
 echo "tier-1 OK"

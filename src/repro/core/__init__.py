@@ -1,7 +1,12 @@
 """RAGPerf core: the paper's configurable RAG pipeline (embedding, indexing,
-retrieval, reranking, generation) behind the Fig. 4 interfaces."""
+retrieval, reranking, generation) behind the Fig. 4 interfaces, assembled
+from a declarative ``PipelineSpec`` via the component registry."""
 from repro.core.interfaces import (  # noqa: F401
     BaseEmbedder, BaseLLM, BaseReranker, Chunk, DBInstance, SearchResult,
     StageTrace)
 from repro.core.pipeline import PipelineConfig, RAGPipeline  # noqa: F401
+from repro.core.registry import available, build, create, register  # noqa: F401
+from repro.core.spec import PipelineSpec, StageSpec  # noqa: F401
+from repro.core.stages import (  # noqa: F401
+    EmbedStage, GenerateStage, QueryBatch, RerankStage, RetrieveStage, Stage)
 from repro.core.vectordb import DBConfig, JaxVectorDB, make_db  # noqa: F401

@@ -4,7 +4,10 @@ chunk provenance can be traced back to the source document."""
 from __future__ import annotations
 
 import re
+from dataclasses import dataclass
 from typing import Iterator, List, Tuple
+
+from repro.core.registry import register
 
 Span = Tuple[int, int, str]   # (start, end, text)
 
@@ -90,3 +93,33 @@ def chunk_document(text: str, method: str = "separator", size: int = 512,
     if method == "semantic":
         return semantic_chunks(text, size)
     raise ValueError(f"unknown chunking method {method!r}")
+
+
+@dataclass
+class Chunker:
+    """A chunking policy bound to its knobs: the pipeline's chunking
+    component (``chunk(text) -> [(start, end, piece)]``)."""
+
+    method: str = "separator"
+    size: int = 512
+    overlap: int = 0
+
+    def chunk(self, text: str) -> List[Span]:
+        return chunk_document(text, self.method, self.size, self.overlap)
+
+
+@register("chunker", "fixed")
+def _fixed_chunker(size: int = 512, overlap: int = 0) -> Chunker:
+    return Chunker("fixed", size, overlap)
+
+
+@register("chunker", "separator")
+def _separator_chunker(size: int = 512, overlap: int = 0) -> Chunker:
+    return Chunker("separator", size, overlap)
+
+
+@register("chunker", "semantic")
+def _semantic_chunker(size: int = 512, overlap: int = 0) -> Chunker:
+    # the semantic chunker finds its own boundaries; overlap is accepted for
+    # spec uniformity but has no effect
+    return Chunker("semantic", size, 0)

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.interfaces import BaseEmbedder
+from repro.core.registry import register
 from repro.core.tokenizer import HashTokenizer
 from repro.models import layers as L
 from repro.models.config import ModelConfig
@@ -41,6 +42,7 @@ def encoder_config(d_model: int = 256, n_layers: int = 4, n_heads: int = 4,
         rope_type="rope", rope_theta=10000.0, remat="none")
 
 
+@register("embedder", "hash")
 class HashEmbedder(BaseEmbedder):
     """Deterministic token-bag embedding: E[token] rows from a fixed random
     Gaussian, mean-pooled, L2-normalized.  Zero model FLOPs; pure lookup."""
@@ -63,6 +65,7 @@ class HashEmbedder(BaseEmbedder):
         return out
 
 
+@register("embedder", "transformer")
 class TransformerEmbedder(BaseEmbedder):
     """Bidirectional transformer encoder + masked mean pool + projection."""
 
@@ -116,11 +119,6 @@ def _encode_fn(params, proj, tokens, *, cfg: ModelConfig):
     return v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-9)
 
 
-EMBEDDERS = {
-    "hash": HashEmbedder,
-    "transformer": TransformerEmbedder,
-}
-
-
 def make_embedder(kind: str = "hash", **kw) -> BaseEmbedder:
-    return EMBEDDERS[kind](**kw)
+    from repro.core import registry
+    return registry.create("embedder", kind, **kw)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.interfaces import BaseLLM, Chunk
+from repro.core.registry import register
 from repro.core.tokenizer import HashTokenizer
 from repro.models import api
 from repro.models.config import ModelConfig
@@ -133,6 +134,7 @@ _FACT = re.compile(r"the (\w+) of ([\w\-]+) is ([\w\-]+)")
 _Q = re.compile(r"what is the (\w+) of ([\w\-]+)")
 
 
+@register("llm", "extractive")
 class ExtractiveLLM(BaseLLM):
     """Deterministic reader: extracts `the <attr> of <subj> is <val>` facts
     from the retrieved context.  Highest-version chunk wins (freshness)."""
@@ -156,11 +158,24 @@ class ExtractiveLLM(BaseLLM):
         return out
 
 
+@register("llm", "model")
+def _model_llm(arch: str = "", smoke: bool = True, max_prompt: int = 256,
+               max_new: int = 16, batch_size: int = 8, seed: int = 0,
+               cfg: Optional[ModelConfig] = None) -> ModelLLM:
+    """Spec-friendly ModelLLM factory: resolves the architecture id to its
+    (smoke or published) ModelConfig unless one is passed directly."""
+    if cfg is None:
+        assert arch, "llm 'model' needs an 'arch' option or a cfg"
+        from repro import configs as arch_configs
+        cfg = (arch_configs.get_smoke(arch) if smoke
+               else arch_configs.get_config(arch))
+    return ModelLLM(cfg, max_prompt=max_prompt, max_new=max_new,
+                    batch_size=batch_size, seed=seed)
+
+
 def make_llm(kind: str = "extractive", cfg: Optional[ModelConfig] = None,
              **kw) -> BaseLLM:
-    if kind == "extractive":
-        return ExtractiveLLM()
-    if kind == "model":
-        assert cfg is not None
-        return ModelLLM(cfg, **kw)
-    raise ValueError(kind)
+    from repro.core import registry
+    if cfg is not None:
+        kw["cfg"] = cfg
+    return registry.create("llm", kind, **kw)

@@ -66,6 +66,11 @@ class DBInstance(abc.ABC):
     def get_chunk(self, chunk_id: int) -> Optional[Chunk]:
         """Payload lookup."""
 
+    def get_chunks(self, chunk_ids: Sequence[int]) -> List[Optional[Chunk]]:
+        """Batched payload lookup; backends override with a single round
+        trip.  The default falls back to per-id ``get_chunk`` calls."""
+        return [self.get_chunk(int(c)) for c in chunk_ids]
+
     @abc.abstractmethod
     def stats(self) -> Dict[str, float]:
         """Index sizes / memory footprint for the monitor."""

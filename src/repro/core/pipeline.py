@@ -1,28 +1,28 @@
 """The end-to-end configurable RAG pipeline (paper §3.3, Fig. 1/2).
 
-``RAGPipeline`` wires embedding → vector DB → (optional) reranking →
-generation behind the Fig. 4 interfaces.  Every stage is timed with
-``StageTimer`` and each request leaves a compact ``StageTrace`` (chunk ids
-only — paper §3.3.2/§3.3.3) for the post-hoc quality evaluation.
+``RAGPipeline`` is now a thin shell over an explicit stage graph: components
+(embedder / chunker / vector DB / reranker / LLM) are constructed uniformly
+from a declarative ``PipelineSpec`` via the component registry, and the query
+path is a list of composable ``Stage`` objects (``repro.core.stages``) folded
+lock-step here or run as pipelined workers by
+``repro.serving.staged.StagedExecutor``.
 
-``PipelineConfig`` exposes the paper's sensitivity knobs: retrieval depth
-(``retrieve_k``), rerank output depth (``rerank_k``), chunking method/size,
-embedding dimension, index scheme, hybrid-update policy and batch size.
+``PipelineConfig`` remains as the flat legacy knob set (paper's sensitivity
+knobs: retrieval depth, rerank depth, chunking method/size, embedding
+dimension, index scheme, hybrid-update policy, batch size); it maps onto a
+spec via ``PipelineSpec.from_config`` so every construction path funnels
+through the same stage graph.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
-from repro.core import chunking
-from repro.core.embedder import make_embedder
-from repro.core.generator import make_llm
+from repro.core import registry
 from repro.core.interfaces import (BaseEmbedder, BaseLLM, BaseReranker, Chunk,
                                    DBInstance, StageTrace)
-from repro.core.reranker import make_reranker
-from repro.core.vectordb import DBConfig, JaxVectorDB
+from repro.core.spec import PipelineSpec
+from repro.core.stages import QueryBatch, build_query_stages, traces_from_batch
 from repro.monitor.monitor import StageTimer
 
 
@@ -57,38 +57,55 @@ class PipelineConfig:
 
 
 class RAGPipeline:
-    def __init__(self, cfg: PipelineConfig,
+    def __init__(self, cfg: Optional[PipelineConfig] = None,
                  embedder: Optional[BaseEmbedder] = None,
                  db: Optional[DBInstance] = None,
                  reranker: Optional[BaseReranker] = None,
-                 llm: Optional[BaseLLM] = None):
-        self.cfg = cfg
+                 llm: Optional[BaseLLM] = None,
+                 spec: Optional[PipelineSpec] = None):
+        if spec is None:
+            cfg = cfg or PipelineConfig()
+            spec = PipelineSpec.from_config(cfg)
+        self.spec = spec
+        self.cfg = cfg                # legacy view; None when spec-built
         self.timer = StageTimer()
         self.traces: List[StageTrace] = []
-        self.embedder = embedder or make_embedder(cfg.embedder, dim=cfg.embed_dim)
-        self.db = db or JaxVectorDB(DBConfig(
-            index_type=cfg.index_type, quant=cfg.quant, dim=cfg.embed_dim,
-            capacity=cfg.capacity, nlist=cfg.nlist, nprobe=cfg.nprobe,
-            use_hybrid=cfg.use_hybrid, flat_capacity=cfg.flat_capacity,
-            rebuild_threshold=cfg.rebuild_threshold, use_kernel=cfg.use_kernel))
+
+        self.embedder = embedder or registry.create(
+            "embedder", spec.embedder.component, **spec.embedder.options)
+        self.chunker = registry.create(
+            "chunker", spec.chunker.component, **spec.chunker.options)
+        # context injection: the DB inherits the embedder's dim, the
+        # bi-encoder reranker re-uses the embedder, unless the spec says
+        # otherwise
+        ctx = {"embedder": self.embedder, "dim": self.embedder.dim}
+        self.db = db or registry.create(
+            "vectordb", spec.vectordb.component, _context=ctx,
+            **spec.vectordb.options)
         if reranker is not None:
             self.reranker = reranker
-        elif cfg.reranker == "none":
-            self.reranker = None
-        elif cfg.reranker == "bi":
-            self.reranker = make_reranker("bi", embedder=self.embedder)
         else:
-            self.reranker = make_reranker(cfg.reranker)
-        if llm is not None:
-            self.llm = llm
-        elif cfg.llm == "model":
-            from repro import configs as arch_configs
-            mc = (arch_configs.get_smoke(cfg.llm_arch) if cfg.llm_smoke
-                  else arch_configs.get_config(cfg.llm_arch))
-            self.llm = make_llm("model", cfg=mc, batch_size=cfg.gen_batch,
-                                max_new=cfg.max_new_tokens)
-        else:
-            self.llm = make_llm("extractive")
+            self.reranker = registry.create(
+                "reranker", spec.reranker.component, _context=ctx,
+                **spec.reranker.options)
+        self.llm = llm or registry.create(
+            "llm", spec.llm.component, **spec.llm.options)
+
+        self.stages = build_query_stages(
+            self.embedder, self.db, self.reranker, self.llm,
+            retrieve_k=spec.retrieve_k, rerank_k=spec.rerank_k,
+            timer=self.timer,
+            batch_sizes={
+                "query_embed": spec.embedder.batch_size,
+                "retrieval": spec.vectordb.batch_size,
+                "rerank": spec.reranker.batch_size,
+                "generation": spec.llm.batch_size,
+            })
+
+    @classmethod
+    def from_spec(cls, spec: PipelineSpec, **component_overrides
+                  ) -> "RAGPipeline":
+        return cls(spec=spec, **component_overrides)
 
     # -- indexing path (paper Fig. 1 steps 1-3) -----------------------------
 
@@ -98,9 +115,7 @@ class RAGPipeline:
         chunks: List[Chunk] = []
         with self.timer.stage("chunking"):
             for doc_id, text in docs:
-                for start, end, piece in chunking.chunk_document(
-                        text, self.cfg.chunk_method, self.cfg.chunk_size,
-                        self.cfg.chunk_overlap):
+                for start, end, piece in self.chunker.chunk(text):
                     chunks.append(Chunk(-1, doc_id, piece, start, end))
         if not chunks:
             return 0
@@ -116,9 +131,7 @@ class RAGPipeline:
     def update_document(self, doc_id: int, text: str, version: int = 1) -> int:
         """Paper §3.2 update op: replace a document's chunks in place."""
         chunks = [Chunk(-1, doc_id, piece, s, e, version=version)
-                  for s, e, piece in chunking.chunk_document(
-                      text, self.cfg.chunk_method, self.cfg.chunk_size,
-                      self.cfg.chunk_overlap)]
+                  for s, e, piece in self.chunker.chunk(text)]
         with self.timer.stage("embedding"):
             vecs = self.embedder.embed([c.text for c in chunks])
         with self.timer.stage("insertion"):
@@ -135,39 +148,15 @@ class RAGPipeline:
               ground_truth: Optional[Sequence[str]] = None,
               gold_chunks: Optional[Sequence[List[int]]] = None
               ) -> List[StageTrace]:
-        cfg = self.cfg
-        with self.timer.stage("query_embed"):
-            qvecs = self.embedder.embed(list(questions))
-        with self.timer.stage("retrieval"):
-            results = self.db.search(qvecs, cfg.retrieve_k)
-        all_candidates: List[List[Chunk]] = []
-        for r in results:
-            cands = [self.db.get_chunk(int(c)) for c in r.chunk_ids if c >= 0]
-            all_candidates.append([c for c in cands if c is not None])
-        contexts: List[List[Chunk]] = []
-        reranked_ids: List[List[int]] = []
-        if self.reranker is not None:
-            with self.timer.stage("rerank"):
-                for q, cands in zip(questions, all_candidates):
-                    top = self.reranker.rerank(q, cands, cfg.rerank_k)
-                    contexts.append([c for c, _ in top])
-                    reranked_ids.append([c.chunk_id for c, _ in top])
-        else:
-            contexts = [c[: cfg.rerank_k] for c in all_candidates]
-            reranked_ids = [[c.chunk_id for c in ctx] for ctx in contexts]
-        with self.timer.stage("generation"):
-            answers = self.llm.generate(list(questions), contexts)
-        traces = []
-        for i, q in enumerate(questions):
-            tr = StageTrace(
-                query=q,
-                retrieved_ids=[int(c) for c in results[i].chunk_ids if c >= 0],
-                reranked_ids=reranked_ids[i],
-                answer=answers[i],
-                ground_truth=(ground_truth[i] if ground_truth else ""),
-                gold_chunk_ids=(list(gold_chunks[i]) if gold_chunks else []),
-            )
-            traces.append(tr)
+        """Lock-step execution: fold the whole batch through the stage graph
+        with a barrier after every stage."""
+        batch = QueryBatch(
+            questions=list(questions),
+            ground_truth=list(ground_truth) if ground_truth else [],
+            gold_chunks=[list(g) for g in gold_chunks] if gold_chunks else [])
+        for stage in self.stages:
+            batch = stage.run(batch)
+        traces = traces_from_batch(batch)
         self.traces.extend(traces)
         return traces
 

@@ -20,11 +20,13 @@ import numpy as np
 
 from repro.core.embedder import TransformerEmbedder, encoder_config, _encode_fn
 from repro.core.interfaces import BaseEmbedder, BaseReranker, Chunk
+from repro.core.registry import register
 from repro.core.tokenizer import HashTokenizer
 from repro.models import layers as L
 from repro.models import transformer
 
 
+@register("reranker", "bi")
 class BiEncoderReranker(BaseReranker):
     def __init__(self, embedder: BaseEmbedder):
         self.embedder = embedder
@@ -39,6 +41,7 @@ class BiEncoderReranker(BaseReranker):
         return [(candidates[i], float(scores[i])) for i in order]
 
 
+@register("reranker", "cross")
 class CrossEncoderReranker(BaseReranker):
     """Joint query‖doc scoring — the expensive, accurate family."""
 
@@ -93,6 +96,7 @@ def _cross_score(params, head, tokens, *, cfg):
     return (pooled @ head)[:, 0]
 
 
+@register("reranker", "overlap")
 class OverlapReranker(BaseReranker):
     """IDF-weighted lexical overlap (BM25-lite): deterministic quality oracle.
 
@@ -121,11 +125,13 @@ class OverlapReranker(BaseReranker):
         return scored[:topk]
 
 
+@register("reranker", "none")
+def _no_reranker():
+    """The rerank stage degrades to a truncation passthrough."""
+    return None
+
+
 def make_reranker(kind: str, embedder: BaseEmbedder = None, **kw) -> BaseReranker:
-    if kind == "bi":
-        return BiEncoderReranker(embedder)
-    if kind == "cross":
-        return CrossEncoderReranker(**kw)
-    if kind == "overlap":
-        return OverlapReranker()
-    raise ValueError(kind)
+    from repro.core import registry
+    return registry.create("reranker", kind, _context={"embedder": embedder},
+                           **kw)

@@ -1,0 +1,152 @@
+"""Declarative pipeline specification (the stage-graph API).
+
+A ``PipelineSpec`` fully describes a RAG pipeline as data: one ``StageSpec``
+per component slot (embedder / chunker / vectordb / reranker / llm) naming a
+registered component plus its constructor options, and the pipeline-level
+retrieval depths.  Specs round-trip losslessly through dict/JSON, so a
+pipeline is reproducible from a config file alone::
+
+    spec = PipelineSpec.from_file("examples/specs/smoke.json")
+    pipe = repro.core.registry.build(spec)
+
+``PipelineSpec.from_config`` maps the legacy flat ``PipelineConfig`` knob set
+onto a spec, which is how the old CLI flags and benchmark helpers stay
+supported — every construction path now funnels through the spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict
+
+# the component slots a pipeline is assembled from, in stage-graph order
+COMPONENT_KINDS = ("embedder", "chunker", "vectordb", "reranker", "llm")
+
+
+@dataclass
+class StageSpec:
+    """One component slot: registry name + constructor kwargs.
+
+    ``batch_size`` is the stage-level micro-batch used by the pipelined
+    executor (0 means "inherit the executor default"); the lock-step path
+    ignores it.
+    """
+
+    component: str
+    options: Dict[str, Any] = field(default_factory=dict)
+    batch_size: int = 0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"component": self.component, "options": dict(self.options),
+                "batch_size": self.batch_size}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "StageSpec":
+        unknown = set(d) - {"component", "options", "batch_size"}
+        if unknown:
+            raise ValueError(f"unknown StageSpec keys: {sorted(unknown)}")
+        if "component" not in d:
+            raise ValueError(f"StageSpec needs a 'component' name, got {d!r}")
+        return cls(component=str(d["component"]),
+                   options=dict(d.get("options", {})),
+                   batch_size=int(d.get("batch_size", 0)))
+
+
+@dataclass
+class PipelineSpec:
+    """The full stage graph: five component slots + retrieval depths."""
+
+    embedder: StageSpec = field(
+        default_factory=lambda: StageSpec("hash", {"dim": 384}))
+    chunker: StageSpec = field(
+        default_factory=lambda: StageSpec("separator",
+                                          {"size": 512, "overlap": 0}))
+    vectordb: StageSpec = field(
+        default_factory=lambda: StageSpec("jax", {"index_type": "ivf"}))
+    reranker: StageSpec = field(
+        default_factory=lambda: StageSpec("overlap"))
+    llm: StageSpec = field(default_factory=lambda: StageSpec("extractive"))
+    retrieve_k: int = 16          # initial retrieval depth
+    rerank_k: int = 4             # context depth passed to generation
+
+    def stage(self, kind: str) -> StageSpec:
+        assert kind in COMPONENT_KINDS, kind
+        return getattr(self, kind)
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            **{k: self.stage(k).to_dict() for k in COMPONENT_KINDS},
+            "retrieve_k": self.retrieve_k,
+            "rerank_k": self.rerank_k,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PipelineSpec":
+        unknown = set(d) - set(COMPONENT_KINDS) - {"retrieve_k", "rerank_k"}
+        if unknown:
+            raise ValueError(f"unknown PipelineSpec keys: {sorted(unknown)}")
+        kw: Dict[str, Any] = {}
+        for kind in COMPONENT_KINDS:
+            if kind in d:
+                kw[kind] = StageSpec.from_dict(d[kind])
+        if "retrieve_k" in d:
+            kw["retrieve_k"] = int(d["retrieve_k"])
+        if "rerank_k" in d:
+            kw["rerank_k"] = int(d["rerank_k"])
+        return cls(**kw)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "PipelineSpec":
+        return cls.from_dict(json.loads(text))
+
+    @classmethod
+    def from_file(cls, path: str) -> "PipelineSpec":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    def replace(self, **kw) -> "PipelineSpec":
+        return dataclasses.replace(self, **kw)
+
+    # -- legacy mapping ------------------------------------------------------
+
+    @classmethod
+    def from_config(cls, cfg) -> "PipelineSpec":
+        """Map a flat legacy ``PipelineConfig`` onto the stage graph.
+
+        Duck-typed (reads attributes only) so it accepts anything with the
+        PipelineConfig field set — the old CLI flags, benchmark overrides and
+        test fixtures all route through here.
+        """
+        llm_opts: Dict[str, Any] = {}
+        if cfg.llm == "model":
+            llm_opts = {"arch": cfg.llm_arch, "smoke": cfg.llm_smoke,
+                        "batch_size": cfg.gen_batch,
+                        "max_new": cfg.max_new_tokens}
+        return cls(
+            embedder=StageSpec(cfg.embedder, {"dim": cfg.embed_dim}),
+            chunker=StageSpec(cfg.chunk_method,
+                              {"size": cfg.chunk_size,
+                               "overlap": cfg.chunk_overlap}),
+            vectordb=StageSpec("jax", {
+                "index_type": cfg.index_type, "quant": cfg.quant,
+                "dim": cfg.embed_dim, "capacity": cfg.capacity,
+                "nlist": cfg.nlist, "nprobe": cfg.nprobe,
+                "use_hybrid": cfg.use_hybrid,
+                "flat_capacity": cfg.flat_capacity,
+                "rebuild_threshold": cfg.rebuild_threshold,
+                "use_kernel": cfg.use_kernel}),
+            reranker=StageSpec(cfg.reranker),
+            llm=StageSpec(cfg.llm, llm_opts, batch_size=cfg.gen_batch),
+            retrieve_k=cfg.retrieve_k,
+            rerank_k=cfg.rerank_k,
+        )

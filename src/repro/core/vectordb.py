@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.interfaces import Chunk, DBInstance, SearchResult
+from repro.core.registry import register
 from repro.kernels import ops as kops
 
 NEG = np.float32(-3.0e38)
@@ -403,6 +404,11 @@ class JaxVectorDB(DBInstance):
     def get_chunk(self, chunk_id: int) -> Optional[Chunk]:
         return self.chunks.get(int(chunk_id))
 
+    def get_chunks(self, chunk_ids: Sequence[int]) -> List[Optional[Chunk]]:
+        """Batched payload lookup: one call for a whole candidate set."""
+        chunks = self.chunks
+        return [chunks.get(int(c)) for c in chunk_ids]
+
     def stats(self) -> Dict[str, float]:
         cfg = self.cfg
         vec_bytes = self.n_slots * cfg.dim * 4
@@ -423,5 +429,8 @@ class JaxVectorDB(DBInstance):
         }
 
 
-def make_db(index_type: str = "ivf", quant: str = "none", **kw) -> JaxVectorDB:
-    return JaxVectorDB(DBConfig(index_type=index_type, quant=quant, **kw))
+@register("vectordb", "jax")
+def make_db(index_type: str = "ivf", quant: str = "none", dim: int = 384,
+            **kw) -> JaxVectorDB:
+    return JaxVectorDB(DBConfig(index_type=index_type, quant=quant, dim=dim,
+                                **kw))

@@ -1,36 +1,59 @@
-"""Serving driver: ``python -m repro.launch.serve --arch llama3_8b --smoke``.
+"""Serving driver: ``python -m repro.launch.serve --arch llama3_8b --smoke``
+or, spec-first, ``python -m repro.launch.serve --config spec.json``.
 
-Runs the RAG pipeline end-to-end with the chosen architecture as generation
-backend.  Three drive modes:
+The pipeline is constructed from a declarative ``PipelineSpec`` either loaded
+from ``--config`` (JSON) or mapped from the legacy CLI flags (``--arch``,
+``--index``, ``--quant``, ...), so both paths exercise the same registry
+``build(spec)`` entry point.  Drive modes:
 
 * ``sync``   — the original offline replay (one op at a time, back-to-back);
 * ``open``   — open-loop load generation (Poisson/bursty/uniform arrivals at
                ``--target-qps``) through the continuous-batching executor;
 * ``closed`` — closed-loop with ``--concurrency`` outstanding requests.
 
-Open/closed modes print achieved vs offered QPS, p50/p95/p99 latency, queue
-wait, and goodput under ``--slo-ms``.
+``--stage-pipeline`` additionally runs the workload's query stream through
+the per-stage pipelined ``StagedExecutor`` (stage N on batch i+1 while stage
+N+1 runs batch i) and prints per-stage busy/idle/occupancy.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-from repro import configs
-from repro.core.generator import ModelLLM
-from repro.core.pipeline import PipelineConfig, RAGPipeline
+from repro.core.pipeline import PipelineConfig
+from repro.core.registry import build
+from repro.core.spec import PipelineSpec
+from repro.metrics.quality import evaluate_traces
 from repro.monitor.monitor import MonitorConfig, ResourceMonitor
 from repro.serving.arrival import ArrivalConfig
 from repro.serving.batcher import BatchPolicy
 from repro.serving.harness import ServingConfig, ServingHarness
+from repro.serving.staged import StagedExecutor
 from repro.workload.corpus import CorpusConfig, SyntheticCorpus
-from repro.workload.generator import WorkloadConfig
-from repro.workload.runner import run_workload
+from repro.workload.generator import WorkloadConfig, WorkloadGenerator
+from repro.workload.runner import gold_chunks_for, run_workload
+
+
+def spec_from_args(args) -> PipelineSpec:
+    """Map the legacy flag set onto a PipelineSpec (back-compat path)."""
+    pcfg = PipelineConfig(
+        index_type=args.index, quant=args.quant, retrieve_k=8, rerank_k=3,
+        gen_batch=args.batch,
+        llm="model" if args.arch else "extractive", llm_arch=args.arch,
+        llm_smoke=args.smoke, max_new_tokens=args.max_new)
+    spec = PipelineSpec.from_config(pcfg)
+    if args.arch:
+        # the serving driver always ran its generator with a short prompt
+        spec.llm.options["max_prompt"] = 128
+    return spec
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--config", default="",
+                    help="PipelineSpec JSON; overrides the legacy flags")
+    ap.add_argument("--arch", default="",
+                    help="generation backbone (legacy flags path)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--docs", type=int, default=64)
     ap.add_argument("--requests", type=int, default=60)
@@ -45,6 +68,9 @@ def main(argv=None):
     # serving-mode flags
     ap.add_argument("--mode", default="sync",
                     choices=["sync", "open", "closed"])
+    ap.add_argument("--stage-pipeline", action="store_true",
+                    help="also run the query stream through the per-stage "
+                         "pipelined executor and print stage occupancy")
     ap.add_argument("--target-qps", type=float, default=20.0,
                     help="offered load for --mode open")
     ap.add_argument("--slo-ms", type=float, default=500.0)
@@ -62,14 +88,12 @@ def main(argv=None):
         ap.error("--target-qps must be > 0")
     if args.concurrency < 1:
         ap.error("--concurrency must be >= 1")
+    if not args.config and not args.arch:
+        ap.error("need --config spec.json or --arch <backbone>")
 
-    cfg = (configs.get_smoke(args.arch) if args.smoke
-           else configs.get_config(args.arch))
-    llm = ModelLLM(cfg, max_prompt=128, max_new=args.max_new,
-                   batch_size=args.batch)
-    pcfg = PipelineConfig(index_type=args.index, quant=args.quant,
-                          retrieve_k=8, rerank_k=3, gen_batch=args.batch)
-    pipe = RAGPipeline(pcfg, llm=llm)
+    spec = (PipelineSpec.from_file(args.config) if args.config
+            else spec_from_args(args))
+    pipe = build(spec)
     monitor = ResourceMonitor(MonitorConfig(out_path=args.monitor_out)).start()
     monitor.add_gauge("db_live", lambda: pipe.db.stats()["live"])
 
@@ -126,7 +150,33 @@ def main(argv=None):
               f"{s.get('goodput_qps', 0.0):.2f} QPS")
         print("quality:", {k: round(v, 3) for k, v in res.quality.items()})
 
-    print("gen stats:", {k: round(v, 4) for k, v in llm.stats.summary().items()})
+    if args.stage_pipeline:
+        # replay the workload's query stream through the pipelined stage
+        # graph: stage N on batch i+1 while stage N+1 runs batch i
+        reqs = [r for r in WorkloadGenerator(wcfg, corpus).requests()
+                if r.op == "query"]
+        golds = [gold_chunks_for(pipe.db, r.gold_doc_id, r.answer)
+                 for r in reqs]
+        executor = StagedExecutor(pipe, default_batch=args.batch)
+        monitor.add_gauges(executor.gauges())
+        pipe.traces.clear()
+        sres = executor.run([r.question for r in reqs],
+                            ground_truth=[r.answer for r in reqs],
+                            gold_chunks=golds)
+        print(f"stage-pipeline: {len(reqs)} queries at "
+              f"{sres.throughput_qps:.2f} QPS (wall {sres.wall_s:.2f}s)")
+        for row in sres.report():
+            print(f"  {row['stage']:12s} busy {row['busy_s']:.3f}s  "
+                  f"idle {row['idle_s']:.3f}s  stall {row['stall_s']:.3f}s  "
+                  f"occupancy {row['occupancy']:.2f}  "
+                  f"mean batch {row['mean_batch']:.1f}")
+        quality = evaluate_traces(sres.traces, pipe.db)
+        print("stage-pipeline quality:",
+              {k: round(v, 3) for k, v in quality.items()})
+
+    if hasattr(pipe.llm, "stats"):
+        print("gen stats:", {k: round(v, 4)
+                             for k, v in pipe.llm.stats.summary().items()})
     print("stage breakdown (s):",
           {k: round(v, 3) for k, v in pipe.breakdown().items()})
     monitor.stop()

@@ -5,10 +5,12 @@ from repro.serving.accounting import LatencyAccountant, RequestRecord, percentil
 from repro.serving.arrival import ArrivalConfig, arrival_times
 from repro.serving.batcher import BatchPolicy, ContinuousBatcher, Submission
 from repro.serving.harness import ServingConfig, ServingHarness, ServingResult
+from repro.serving.staged import StagedExecutor, StagedResult, StageStats
 
 __all__ = [
     "ArrivalConfig", "arrival_times",
     "BatchPolicy", "ContinuousBatcher", "Submission",
     "LatencyAccountant", "RequestRecord", "percentile",
     "ServingConfig", "ServingHarness", "ServingResult",
+    "StagedExecutor", "StagedResult", "StageStats",
 ]

@@ -19,6 +19,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterator, List, Optional
 
 from repro.core.pipeline import RAGPipeline
+from repro.core.registry import build
+from repro.core.spec import PipelineSpec
 from repro.metrics.quality import evaluate_traces
 from repro.serving.accounting import LatencyAccountant, RequestRecord
 from repro.serving.arrival import ArrivalConfig, arrival_times
@@ -48,9 +50,14 @@ class ServingResult:
 
 
 class ServingHarness:
-    def __init__(self, pipeline: RAGPipeline, corpus: SyntheticCorpus,
+    def __init__(self, pipeline, corpus: SyntheticCorpus,
                  wcfg: WorkloadConfig, scfg: ServingConfig):
-        self.pipeline = pipeline
+        if isinstance(pipeline, PipelineSpec):
+            # spec path: the harness owns construction, so it also indexes
+            # the corpus it is about to serve
+            pipeline = build(pipeline)
+            pipeline.index_documents(corpus.all_documents())
+        self.pipeline: RAGPipeline = pipeline
         self.corpus = corpus
         self.wcfg = wcfg
         self.scfg = scfg

@@ -7,6 +7,8 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.pipeline import RAGPipeline
+from repro.core.registry import build
+from repro.core.spec import PipelineSpec
 from repro.metrics.quality import evaluate_traces
 from repro.workload.corpus import SyntheticCorpus
 from repro.workload.generator import Request, WorkloadConfig, WorkloadGenerator
@@ -34,9 +36,13 @@ class RunResult:
         return sum(xs) / len(xs) if xs else 0.0
 
 
-def run_workload(pipeline: RAGPipeline, corpus: SyntheticCorpus,
+def run_workload(pipeline, corpus: SyntheticCorpus,
                  cfg: WorkloadConfig, query_batch: int = 1,
                  evaluate: bool = True) -> RunResult:
+    """Replay a workload stream; ``pipeline`` may be a live ``RAGPipeline``
+    or a declarative ``PipelineSpec`` (built here, corpus *not* indexed)."""
+    if isinstance(pipeline, PipelineSpec):
+        pipeline = build(pipeline)
     gen = WorkloadGenerator(cfg, corpus)
     res = RunResult()
     t_start = time.perf_counter()

@@ -1,0 +1,153 @@
+"""Stage-graph API: PipelineSpec serialization round-trips, registry error
+paths and context injection, and build(spec) construction."""
+import pytest
+
+from repro.core import registry
+from repro.core.embedder import HashEmbedder
+from repro.core.pipeline import PipelineConfig, RAGPipeline
+from repro.core.registry import RegistryError, build, create, register
+from repro.core.reranker import BiEncoderReranker, OverlapReranker
+from repro.core.spec import COMPONENT_KINDS, PipelineSpec, StageSpec
+from repro.core.vectordb import JaxVectorDB
+
+
+# -- spec serialization ------------------------------------------------------
+
+
+def test_spec_default_round_trip():
+    spec = PipelineSpec()
+    assert PipelineSpec.from_dict(spec.to_dict()) == spec
+    assert PipelineSpec.from_json(spec.to_json()) == spec
+
+
+def test_spec_nondefault_round_trip():
+    spec = PipelineSpec(
+        embedder=StageSpec("transformer", {"dim": 128, "d_model": 64},
+                           batch_size=16),
+        chunker=StageSpec("fixed", {"size": 256, "overlap": 32}),
+        vectordb=StageSpec("jax", {"index_type": "ivf", "quant": "pq",
+                                   "nlist": 8, "capacity": 4096}),
+        reranker=StageSpec("bi", batch_size=2),
+        llm=StageSpec("model", {"arch": "llama3_8b", "smoke": True},
+                      batch_size=4),
+        retrieve_k=32, rerank_k=5)
+    text = spec.to_json()
+    again = PipelineSpec.from_json(text)
+    assert again == spec
+    assert again.to_json() == text
+
+
+def test_spec_file_round_trip(tmp_path):
+    spec = PipelineSpec(retrieve_k=11)
+    path = str(tmp_path / "spec.json")
+    spec.save(path)
+    assert PipelineSpec.from_file(path) == spec
+
+
+def test_spec_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown PipelineSpec keys"):
+        PipelineSpec.from_dict({"retrieve_k": 4, "typo_key": 1})
+    with pytest.raises(ValueError, match="unknown StageSpec keys"):
+        StageSpec.from_dict({"component": "hash", "opts": {}})
+    with pytest.raises(ValueError, match="component"):
+        StageSpec.from_dict({"options": {}})
+
+
+def test_spec_from_config_maps_legacy_knobs():
+    cfg = PipelineConfig(embedder="hash", embed_dim=64, chunk_method="fixed",
+                         chunk_size=128, chunk_overlap=16, index_type="flat",
+                         quant="sq8", capacity=2048, reranker="none",
+                         retrieve_k=12, rerank_k=5, llm="model",
+                         llm_arch="llama3_8b", gen_batch=2, max_new_tokens=4)
+    spec = PipelineSpec.from_config(cfg)
+    assert spec.embedder == StageSpec("hash", {"dim": 64})
+    assert spec.chunker == StageSpec("fixed", {"size": 128, "overlap": 16})
+    assert spec.vectordb.options["index_type"] == "flat"
+    assert spec.vectordb.options["quant"] == "sq8"
+    assert spec.vectordb.options["dim"] == 64
+    assert spec.reranker.component == "none"
+    assert spec.llm == StageSpec("model", {"arch": "llama3_8b", "smoke": True,
+                                           "batch_size": 2, "max_new": 4},
+                                 batch_size=2)
+    assert (spec.retrieve_k, spec.rerank_k) == (12, 5)
+    # and the mapping itself round-trips through JSON
+    assert PipelineSpec.from_json(spec.to_json()) == spec
+
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_registry_lists_builtin_components():
+    assert set(registry.available()) >= set(COMPONENT_KINDS)
+    assert {"hash", "transformer"} <= set(registry.available("embedder"))
+    assert {"none", "bi", "cross", "overlap"} <= \
+        set(registry.available("reranker"))
+    assert {"extractive", "model"} <= set(registry.available("llm"))
+    assert "jax" in registry.available("vectordb")
+
+
+def test_registry_duplicate_name_raises():
+    @register("embedder", "dup-test-embedder")
+    def _factory():            # pragma: no cover - never constructed
+        return None
+
+    with pytest.raises(ValueError, match="duplicate"):
+        register("embedder", "dup-test-embedder")(lambda: None)
+
+
+def test_registry_unknown_name_lists_available():
+    with pytest.raises(RegistryError, match="available"):
+        create("embedder", "no-such-embedder")
+    with pytest.raises(RegistryError, match="kinds"):
+        create("no-such-kind", "hash")
+
+
+def test_registry_context_injection_only_for_named_params():
+    emb = HashEmbedder(dim=16)
+    rr = create("reranker", "bi", _context={"embedder": emb, "dim": 16})
+    assert isinstance(rr, BiEncoderReranker)
+    assert rr.embedder is emb
+    # OverlapReranker names neither context param: nothing is injected
+    assert isinstance(
+        create("reranker", "overlap", _context={"embedder": emb, "dim": 16}),
+        OverlapReranker)
+
+
+# -- build(spec) -------------------------------------------------------------
+
+
+def test_build_constructs_working_pipeline():
+    spec = PipelineSpec(
+        embedder=StageSpec("hash", {"dim": 64}),
+        vectordb=StageSpec("jax", {"index_type": "flat", "capacity": 1024}),
+        retrieve_k=4, rerank_k=2)
+    pipe = build(spec)
+    assert isinstance(pipe, RAGPipeline)
+    assert pipe.embedder.dim == 64
+    assert isinstance(pipe.db, JaxVectorDB)
+    assert pipe.db.cfg.dim == 64        # dim injected from the embedder
+    pipe.index_documents([(0, "the capital of foo is bar. filler text here.")])
+    tr = pipe.query(["what is the capital of foo?"])
+    assert tr[0].answer == "bar"
+    assert [s.name for s in pipe.stages] == \
+        ["query_embed", "retrieval", "rerank", "generation"]
+
+
+def test_build_honors_component_overrides():
+    emb = HashEmbedder(dim=32)
+    pipe = build(PipelineSpec(vectordb=StageSpec(
+        "jax", {"index_type": "flat", "capacity": 256})), embedder=emb)
+    assert pipe.embedder is emb
+    assert pipe.db.cfg.dim == 32
+
+
+def test_none_reranker_stage_is_passthrough():
+    pipe = build(PipelineSpec(
+        reranker=StageSpec("none"),
+        vectordb=StageSpec("jax", {"index_type": "flat", "capacity": 256}),
+        retrieve_k=4, rerank_k=2))
+    assert pipe.reranker is None
+    pipe.index_documents([(d, f"the color of x{d} is red. " * 12)
+                          for d in range(8)])
+    tr = pipe.query(["what is the color of x3?"])
+    assert tr[0].reranked_ids == tr[0].retrieved_ids[:2]

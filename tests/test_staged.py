@@ -1,0 +1,157 @@
+"""Per-stage pipelined executor: output equivalence with lock-step
+execution, per-stage batch sizes, occupancy accounting, and the per-request
+stage-latency traces (paper §3.3.2)."""
+import numpy as np
+import pytest
+
+from repro.core.pipeline import PipelineConfig, RAGPipeline
+from repro.serving.staged import StagedExecutor
+from repro.workload.corpus import CorpusConfig, SyntheticCorpus
+from repro.workload.runner import gold_chunks_for
+
+STAGE_NAMES = ["query_embed", "retrieval", "rerank", "generation"]
+
+
+@pytest.fixture(scope="module")
+def rig():
+    corpus = SyntheticCorpus(CorpusConfig(n_docs=24, seed=7))
+    pipe = RAGPipeline(PipelineConfig(index_type="flat", capacity=1 << 12,
+                                      retrieve_k=6, rerank_k=2))
+    pipe.index_documents(corpus.all_documents())
+    rng = np.random.default_rng(7)
+    qs, ans, golds = [], [], []
+    for d in range(24):
+        q, a = corpus.question_for(d, rng)
+        qs.append(q)
+        ans.append(a)
+        golds.append(gold_chunks_for(pipe.db, d, a))
+    return pipe, qs, ans, golds
+
+
+def test_staged_matches_lockstep_outputs(rig):
+    pipe, qs, ans, golds = rig
+    pipe.traces.clear()
+    lock = []
+    for lo in range(0, len(qs), 4):
+        lock.extend(pipe.query(qs[lo:lo + 4], ground_truth=ans[lo:lo + 4],
+                               gold_chunks=golds[lo:lo + 4]))
+    pipe.traces.clear()
+    res = StagedExecutor(pipe, default_batch=4).run(
+        qs, ground_truth=ans, gold_chunks=golds)
+    assert [t.answer for t in res.traces] == [t.answer for t in lock]
+    assert [t.retrieved_ids for t in res.traces] == \
+        [t.retrieved_ids for t in lock]
+    assert [t.reranked_ids for t in res.traces] == \
+        [t.reranked_ids for t in lock]
+    assert [t.query for t in res.traces] == qs          # original order
+    assert [t.ground_truth for t in res.traces] == ans
+    # executor appends its traces to the shared pipeline trace log
+    assert pipe.traces == res.traces
+
+
+def test_staged_accounts_every_item_per_stage(rig):
+    pipe, qs, ans, golds = rig
+    pipe.traces.clear()
+    res = StagedExecutor(pipe, default_batch=8).run(
+        qs, ground_truth=ans, gold_chunks=golds)
+    assert res.throughput_qps > 0 and res.wall_s > 0
+    assert [s.name for s in res.stage_stats] == STAGE_NAMES
+    for s in res.stage_stats:
+        assert s.n_items == len(qs), s.name
+        assert s.n_batches >= 1
+        assert s.busy_s > 0
+        assert 0.0 <= s.occupancy <= 1.0
+    rows = res.report()
+    assert all(set(r) >= {"stage", "busy_s", "idle_s", "stall_s",
+                          "occupancy", "mean_batch"} for r in rows)
+
+
+def test_staged_per_stage_batch_sizes(rig):
+    pipe, qs, ans, golds = rig
+    pipe.traces.clear()
+    ex = StagedExecutor(pipe, batch_sizes={"retrieval": 12, "generation": 3},
+                        default_batch=6)
+    assert ex.batch_sizes == {"query_embed": 6, "retrieval": 12,
+                              "rerank": 6, "generation": 3}
+    res = ex.run(qs, ground_truth=ans, gold_chunks=golds)
+    by_name = {s.name: s for s in res.stage_stats}
+    # generation must split into more batches than the wider retrieval stage
+    assert by_name["generation"].n_batches >= by_name["retrieval"].n_batches
+    assert max(s.n_items / s.n_batches for s in res.stage_stats) <= 12
+
+
+def test_staged_gauges_report_floats(rig):
+    pipe, qs, ans, golds = rig
+    ex = StagedExecutor(pipe, default_batch=4)
+    g = ex.gauges()
+    assert set(g) == {f"stage_{n}_queue_depth" for n in STAGE_NAMES}
+    for fn in g.values():
+        assert fn() == 0.0
+
+
+def test_trace_latency_populated_lockstep(rig):
+    """Satellite: StageTrace.latency_s carries per-stage per-request time."""
+    pipe, qs, ans, golds = rig
+    pipe.traces.clear()
+    tr = pipe.query(qs[:4], ground_truth=ans[:4], gold_chunks=golds[:4])
+    for t in tr:
+        assert set(t.latency_s) == set(STAGE_NAMES)
+        assert all(v >= 0.0 for v in t.latency_s.values())
+        assert sum(t.latency_s.values()) > 0.0
+
+
+def test_trace_latency_populated_staged(rig):
+    pipe, qs, ans, golds = rig
+    pipe.traces.clear()
+    res = StagedExecutor(pipe, default_batch=4).run(
+        qs, ground_truth=ans, gold_chunks=golds)
+    for t in res.traces:
+        assert set(t.latency_s) == set(STAGE_NAMES)
+        assert sum(t.latency_s.values()) > 0.0
+
+
+def test_staged_stage_exception_propagates_not_deadlocks(rig):
+    """A raising stage must fail the run promptly, not hang the executor."""
+    pipe, qs, ans, golds = rig
+    pipe.traces.clear()
+
+    class _Boom(Exception):
+        pass
+
+    ex = StagedExecutor(pipe, default_batch=4)
+    original = ex.stages[3]._apply
+
+    def explode(batch):
+        raise _Boom("generation backend died")
+
+    ex.stages[3]._apply = explode
+    try:
+        with pytest.raises(_Boom, match="generation backend died"):
+            ex.run(qs, ground_truth=ans, gold_chunks=golds)
+    finally:
+        ex.stages[3]._apply = original
+
+
+def test_harness_accepts_spec_and_indexes_corpus():
+    from repro.core.spec import PipelineSpec, StageSpec
+    from repro.serving.arrival import ArrivalConfig
+    from repro.serving.batcher import BatchPolicy
+    from repro.serving.harness import ServingConfig, ServingHarness
+    from repro.workload.generator import WorkloadConfig
+
+    corpus = SyntheticCorpus(CorpusConfig(n_docs=12, seed=9))
+    spec = PipelineSpec(
+        vectordb=StageSpec("jax", {"index_type": "flat", "capacity": 2048}),
+        retrieve_k=4, rerank_k=2)
+    h = ServingHarness(
+        spec, corpus,
+        WorkloadConfig(query_frac=1.0, update_frac=0.0, n_requests=10,
+                       seed=9),
+        ServingConfig(arrival=ArrivalConfig(mode="open", target_qps=200.0,
+                                            n_requests=10, seed=9),
+                      policy=BatchPolicy(max_batch=4, max_wait_s=0.005),
+                      evaluate=True))
+    assert h.pipeline.db.stats()["live"] > 0      # corpus was indexed
+    res = h.run()
+    assert res.summary["n_requests"] == 10
+    assert res.quality["context_recall"] > 0.5

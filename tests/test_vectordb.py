@@ -211,3 +211,12 @@ def test_stats_report_index_sizes():
     assert s["live"] == 256
     assert s["index_bytes"] > 0
     assert s["rebuilds"] >= 1
+
+
+def test_get_chunks_batched_matches_per_id():
+    db = make_db("flat", dim=8, capacity=64)
+    db.insert(_mk_vecs(16, 8), _chunks(16))
+    ids = [0, 5, 15, 999, -1, 3]       # mix of live, missing and invalid
+    batched = db.get_chunks(ids)
+    assert batched == [db.get_chunk(i) for i in ids]
+    assert batched[3] is None and batched[4] is None
