@@ -8,8 +8,9 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (accuracy_eval, index_schemes, indexing_breakdown,
-                        monitor_overhead, query_breakdown, resource_limits,
+from benchmarks import (accuracy_eval, elastic_scaling, index_schemes,
+                        indexing_breakdown, monitor_overhead,
+                        query_breakdown, resource_limits,
                         resource_utilization, sensitivity, serving,
                         stage_pipeline, update_workload)
 from benchmarks.common import emit
@@ -26,6 +27,7 @@ MODULES = {
     "monitor_overhead": monitor_overhead,     # §5.8
     "serving": serving,                       # open/closed-loop QPS sweep
     "stage_pipeline": stage_pipeline,         # lock-step vs pipelined stages
+    "elastic_scaling": elastic_scaling,       # static vs elastic + knob ladder
 }
 
 

@@ -5,8 +5,8 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q
+echo "== tier-1: pytest (fast: -m 'not slow') =="
+python -m pytest -x -q -m "not slow"
 
 echo "== tier-1: serving benchmark smoke =="
 python -m benchmarks.serving --smoke > /dev/null
@@ -14,5 +14,10 @@ python -m benchmarks.serving --smoke > /dev/null
 echo "== tier-1: spec-built serving smoke =="
 python -m repro.launch.serve --config examples/specs/smoke.json \
     --mode open --requests 20 > /dev/null
+
+echo "== tier-1: elastic scaling smoke (static vs elastic, bursty) =="
+# --check asserts: elastic SLO goodput/p99 >= static, outputs equivalent to
+# lock-step with control disabled, scaling events replay deterministically
+python -m benchmarks.elastic_scaling --smoke --check > /dev/null
 
 echo "tier-1 OK"

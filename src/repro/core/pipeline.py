@@ -95,12 +95,7 @@ class RAGPipeline:
             self.embedder, self.db, self.reranker, self.llm,
             retrieve_k=spec.retrieve_k, rerank_k=spec.rerank_k,
             timer=self.timer,
-            batch_sizes={
-                "query_embed": spec.embedder.batch_size,
-                "retrieval": spec.vectordb.batch_size,
-                "rerank": spec.reranker.batch_size,
-                "generation": spec.llm.batch_size,
-            })
+            batch_sizes=spec.stage_batch_sizes())
 
     @classmethod
     def from_spec(cls, spec: PipelineSpec, **component_overrides

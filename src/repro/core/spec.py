@@ -18,10 +18,14 @@ from __future__ import annotations
 import dataclasses
 import json
 from dataclasses import dataclass, field
-from typing import Any, Dict
+from typing import Any, Dict, List
 
 # the component slots a pipeline is assembled from, in stage-graph order
 COMPONENT_KINDS = ("embedder", "chunker", "vectordb", "reranker", "llm")
+
+# component slot -> query-path stage name (the chunker has no query stage)
+QUERY_STAGE_NAMES = {"embedder": "query_embed", "vectordb": "retrieval",
+                     "reranker": "rerank", "llm": "generation"}
 
 
 @dataclass
@@ -30,27 +34,75 @@ class StageSpec:
 
     ``batch_size`` is the stage-level micro-batch used by the pipelined
     executor (0 means "inherit the executor default"); the lock-step path
-    ignores it.
+    ignores it.  ``replicas`` is the *initial* worker-pool width the elastic
+    executor runs for this stage (the autoscaler may grow/shrink it at
+    runtime); the single-worker ``StagedExecutor`` and the lock-step path
+    ignore it.
     """
 
     component: str
     options: Dict[str, Any] = field(default_factory=dict)
     batch_size: int = 0
+    replicas: int = 1
+
+    def __post_init__(self):
+        assert self.replicas >= 1, f"replicas must be >= 1: {self.replicas}"
 
     def to_dict(self) -> Dict[str, Any]:
         return {"component": self.component, "options": dict(self.options),
-                "batch_size": self.batch_size}
+                "batch_size": self.batch_size, "replicas": self.replicas}
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "StageSpec":
-        unknown = set(d) - {"component", "options", "batch_size"}
+        unknown = set(d) - {"component", "options", "batch_size", "replicas"}
         if unknown:
             raise ValueError(f"unknown StageSpec keys: {sorted(unknown)}")
         if "component" not in d:
             raise ValueError(f"StageSpec needs a 'component' name, got {d!r}")
         return cls(component=str(d["component"]),
                    options=dict(d.get("options", {})),
-                   batch_size=int(d.get("batch_size", 0)))
+                   batch_size=int(d.get("batch_size", 0)),
+                   replicas=int(d.get("replicas", 1)))
+
+
+@dataclass
+class AutoscaleSpec:
+    """Controller settings for elastic serving (``repro.serving.autoscale``).
+
+    ``ladder`` is the quality ladder the controller walks under SLO
+    pressure: ``[[nprobe, rerank_k], ...]`` from the configured quality
+    (step 0) down to the cheapest acceptable setting.  Empty means "derive a
+    default ladder from the pipeline's configured knobs".
+    """
+
+    enabled: bool = False
+    max_replicas: int = 4
+    interval_ms: float = 200.0
+    slo_ms: float = 500.0
+    max_batch: int = 64                 # batch-size autoscaling ceiling
+    ladder: List[List[int]] = field(default_factory=list)
+
+    _KEYS = ("enabled", "max_replicas", "interval_ms", "slo_ms", "max_batch",
+             "ladder")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"enabled": self.enabled, "max_replicas": self.max_replicas,
+                "interval_ms": self.interval_ms, "slo_ms": self.slo_ms,
+                "max_batch": self.max_batch,
+                "ladder": [list(step) for step in self.ladder]}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "AutoscaleSpec":
+        unknown = set(d) - set(cls._KEYS)
+        if unknown:
+            raise ValueError(f"unknown AutoscaleSpec keys: {sorted(unknown)}")
+        return cls(enabled=bool(d.get("enabled", False)),
+                   max_replicas=int(d.get("max_replicas", 4)),
+                   interval_ms=float(d.get("interval_ms", 200.0)),
+                   slo_ms=float(d.get("slo_ms", 500.0)),
+                   max_batch=int(d.get("max_batch", 64)),
+                   ladder=[[int(x) for x in step]
+                           for step in d.get("ladder", [])])
 
 
 @dataclass
@@ -69,10 +121,21 @@ class PipelineSpec:
     llm: StageSpec = field(default_factory=lambda: StageSpec("extractive"))
     retrieve_k: int = 16          # initial retrieval depth
     rerank_k: int = 4             # context depth passed to generation
+    autoscale: AutoscaleSpec = field(default_factory=AutoscaleSpec)
 
     def stage(self, kind: str) -> StageSpec:
         assert kind in COMPONENT_KINDS, kind
         return getattr(self, kind)
+
+    def stage_replicas(self) -> Dict[str, int]:
+        """Initial elastic replica count per query-path stage name."""
+        return {name: self.stage(kind).replicas
+                for kind, name in QUERY_STAGE_NAMES.items()}
+
+    def stage_batch_sizes(self) -> Dict[str, int]:
+        """Per-stage micro-batch overrides keyed by query-path stage name."""
+        return {name: self.stage(kind).batch_size
+                for kind, name in QUERY_STAGE_NAMES.items()}
 
     # -- serialization ------------------------------------------------------
 
@@ -81,11 +144,13 @@ class PipelineSpec:
             **{k: self.stage(k).to_dict() for k in COMPONENT_KINDS},
             "retrieve_k": self.retrieve_k,
             "rerank_k": self.rerank_k,
+            "autoscale": self.autoscale.to_dict(),
         }
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "PipelineSpec":
-        unknown = set(d) - set(COMPONENT_KINDS) - {"retrieve_k", "rerank_k"}
+        unknown = (set(d) - set(COMPONENT_KINDS)
+                   - {"retrieve_k", "rerank_k", "autoscale"})
         if unknown:
             raise ValueError(f"unknown PipelineSpec keys: {sorted(unknown)}")
         kw: Dict[str, Any] = {}
@@ -96,6 +161,8 @@ class PipelineSpec:
             kw["retrieve_k"] = int(d["retrieve_k"])
         if "rerank_k" in d:
             kw["rerank_k"] = int(d["rerank_k"])
+        if "autoscale" in d:
+            kw["autoscale"] = AutoscaleSpec.from_dict(d["autoscale"])
         return cls(**kw)
 
     def to_json(self, indent: int = 2) -> str:

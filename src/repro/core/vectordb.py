@@ -18,6 +18,7 @@ All heavy scoring runs in jitted JAX (optionally via the Pallas kernels in
 from __future__ import annotations
 
 import math
+import threading
 import time
 from dataclasses import dataclass
 from functools import partial
@@ -200,10 +201,20 @@ class DBConfig:
 
 
 class JaxVectorDB(DBInstance):
-    """Unified vector DB: flat/IVF × {none, sq8, pq} × hybrid updates."""
+    """Unified vector DB: flat/IVF × {none, sq8, pq} × hybrid updates.
+
+    Thread-safety contract (elastic serving): all mutations
+    (insert/remove/update/build_index) serialize on one reentrant lock, and
+    ``search`` snapshots every piece of index state it needs under that same
+    lock before computing outside it.  Writers only ever (a) fill slots that
+    are not yet live, (b) flip ``live``/``indexed`` bits, or (c) swap whole
+    index arrays — so a search running against its snapshot sees a
+    consistent (possibly slightly stale) view, never a torn one.
+    """
 
     def __init__(self, cfg: DBConfig):
         self.cfg = cfg
+        self._mu = threading.RLock()   # serializes mutations vs snapshots
         d, cap = cfg.dim, cfg.capacity
         self.vectors = np.zeros((cap, d), dtype=np.float32)
         self.live = np.zeros((cap,), dtype=bool)
@@ -234,38 +245,54 @@ class JaxVectorDB(DBInstance):
         t0 = time.perf_counter()
         n = len(chunks)
         assert vectors.shape == (n, self.cfg.dim)
-        if self.n_slots + n > self.cfg.capacity:
-            raise MemoryError(
-                f"vector store full ({self.n_slots}+{n} > {self.cfg.capacity})")
-        slots = np.arange(self.n_slots, self.n_slots + n)
-        self.n_slots += n
-        self.vectors[slots] = vectors
-        self.live[slots] = True
-        for s, c in zip(slots, chunks):
-            c.chunk_id = int(s)
-            self.chunks[int(s)] = c
-            self.doc_slots.setdefault(c.doc_id, []).append(int(s))
-        self.counters["inserts"] += n
-        self.counters["insert_time_s"] += time.perf_counter() - t0
-        if self._main_built() and self.cfg.use_hybrid:
-            self._maybe_rebuild()
-        elif self._main_built():
-            # no hybrid buffer: fresh rows invisible until the next rebuild
-            pass
+        with self._mu:
+            if self.n_slots + n > self.cfg.capacity:
+                raise MemoryError(
+                    f"vector store full ({self.n_slots}+{n} > "
+                    f"{self.cfg.capacity})")
+            slots = np.arange(self.n_slots, self.n_slots + n)
+            self.n_slots += n
+            # fill payloads before flipping live: a concurrent search that
+            # snapshotted earlier masks these rows out; one that snapshots
+            # after sees complete rows
+            self.vectors[slots] = vectors
+            for s, c in zip(slots, chunks):
+                c.chunk_id = int(s)
+                self.chunks[int(s)] = c
+                self.doc_slots.setdefault(c.doc_id, []).append(int(s))
+            self.live[slots] = True
+            self.counters["inserts"] += n
+            self.counters["insert_time_s"] += time.perf_counter() - t0
+            if self._main_built() and self.cfg.use_hybrid:
+                self._maybe_rebuild()
+            elif self._main_built():
+                # no hybrid buffer: fresh rows invisible until next rebuild
+                pass
 
     def remove(self, doc_id: int) -> int:
-        slots = self.doc_slots.pop(doc_id, [])
-        for s in slots:
-            self.live[s] = False
-            self.chunks.pop(s, None)
-        self.counters["removals"] += len(slots)
-        return len(slots)
+        with self._mu:
+            slots = self.doc_slots.pop(doc_id, [])
+            for s in slots:
+                self.live[s] = False
+                self.chunks.pop(s, None)
+            self.counters["removals"] += len(slots)
+            return len(slots)
 
     def update(self, doc_id: int, vectors: np.ndarray,
                chunks: Sequence[Chunk]) -> None:
         """Replace a document's chunks (delete + insert semantics)."""
-        self.remove(doc_id)
-        self.insert(vectors, chunks)
+        with self._mu:
+            self.remove(doc_id)
+            self.insert(vectors, chunks)
+
+    def set_nprobe(self, nprobe: int) -> None:
+        """Adjust IVF probe depth at runtime (the autoscaler quality knob).
+
+        Takes effect on the next search; each distinct value has its own jit
+        cache entry (``nprobe`` is a static argument), so ladders should use
+        a handful of levels, not a continuum.
+        """
+        self.cfg.nprobe = max(1, int(nprobe))
 
     # -- index build -------------------------------------------------------
 
@@ -273,6 +300,10 @@ class JaxVectorDB(DBInstance):
         return self.cfg.index_type == "flat" or self.centroids is not None
 
     def build_index(self) -> None:
+        with self._mu:
+            self._build_index_locked()
+
+    def _build_index_locked(self) -> None:
         t0 = time.perf_counter()
         cfg = self.cfg
         live_idx = np.nonzero(self.live)[0]
@@ -344,10 +375,11 @@ class JaxVectorDB(DBInstance):
         self.pq_codes = codes
 
     def _maybe_rebuild(self):
+        # only called with self._mu held (insert path)
         fresh = int((self.live & ~self.indexed).sum())
         self.counters["flat_fill"] = fresh / max(self.cfg.flat_capacity, 1)
         if fresh >= self.cfg.rebuild_threshold * self.cfg.flat_capacity:
-            self.build_index()
+            self._build_index_locked()
 
     # -- search ------------------------------------------------------------
 
@@ -355,49 +387,77 @@ class JaxVectorDB(DBInstance):
         t0 = time.perf_counter()
         q = jnp.asarray(vectors, jnp.float32)
         scores, idx = self._search_arrays(q, k)
-        self.counters["searches"] += len(vectors)
-        self.counters["search_time_s"] += time.perf_counter() - t0
+        with self._mu:   # concurrent retrieval replicas share the counters
+            self.counters["searches"] += len(vectors)
+            self.counters["search_time_s"] += time.perf_counter() - t0
         return [SearchResult(chunk_ids=np.asarray(idx[i]),
                              scores=np.asarray(scores[i]))
                 for i in range(len(vectors))]
 
+    def _snapshot(self) -> Dict[str, object]:
+        """Grab a consistent view of all search-relevant index state.
+
+        Mask arrays are copied (writers flip their bits in place); index
+        arrays are captured by reference (writers swap whole objects).
+        ``vectors`` is referenced, not copied — rows mutated after the
+        snapshot belong to slots that are non-live in the copied masks.
+        """
+        with self._mu:
+            return {
+                "built": self._main_built(),
+                "live": self.live.copy(),
+                "indexed": self.indexed.copy(),
+                "vectors": self.vectors,
+                "centroids": self.centroids,
+                "buckets": self.buckets,
+                "bucket_live": self.bucket_live,
+                "sq_codes": self.sq_codes, "sq_scale": self.sq_scale,
+                "pq_codes": self.pq_codes, "pq_codebook": self.pq_codebook,
+                "nprobe": self.cfg.nprobe,
+            }
+
     def _search_arrays(self, q, k: int) -> Tuple[np.ndarray, np.ndarray]:
         cfg = self.cfg
-        main_live = self.live & self.indexed if cfg.use_hybrid else self.live
-        if not self._main_built():
+        snap = self._snapshot()
+        live, indexed = snap["live"], snap["indexed"]
+        main_live = live & indexed if cfg.use_hybrid else live
+        if not snap["built"]:
             # index never built: brute-force everything (cold start)
-            s, i = _flat_search(q, jnp.asarray(self.vectors),
-                                jnp.asarray(self.live), k, cfg.use_kernel)
+            s, i = _flat_search(q, jnp.asarray(snap["vectors"]),
+                                jnp.asarray(live), k, cfg.use_kernel)
             return np.asarray(s), np.asarray(i)
-        s_main, i_main = self._search_main(q, jnp.asarray(main_live), k)
+        s_main, i_main = self._search_main(q, jnp.asarray(main_live), k, snap)
         if not cfg.use_hybrid:
             return np.asarray(s_main), np.asarray(i_main)
-        fresh = self.live & ~self.indexed
+        fresh = live & ~indexed
         if not fresh.any():
             return np.asarray(s_main), np.asarray(i_main)
         # linear scan of the temp flat buffer (the paper's freshness path)
-        s_fl, i_fl = _flat_search(q, jnp.asarray(self.vectors),
+        s_fl, i_fl = _flat_search(q, jnp.asarray(snap["vectors"]),
                                   jnp.asarray(fresh), k, cfg.use_kernel)
         return merge_topk(np.asarray(s_main), np.asarray(i_main),
                           np.asarray(s_fl), np.asarray(i_fl), k)
 
-    def _search_main(self, q, live, k: int):
+    def _search_main(self, q, live, k: int, snap: Dict[str, object]):
         cfg = self.cfg
         if cfg.index_type == "flat":
-            if cfg.quant == "sq8" and self.sq_codes is not None:
-                return _sq8_flat_search(q, jnp.asarray(self.sq_codes),
-                                        jnp.asarray(self.sq_scale), live, k)
-            return _flat_search(q, jnp.asarray(self.vectors), live, k,
+            if cfg.quant == "sq8" and snap["sq_codes"] is not None:
+                return _sq8_flat_search(q, jnp.asarray(snap["sq_codes"]),
+                                        jnp.asarray(snap["sq_scale"]),
+                                        live, k)
+            return _flat_search(q, jnp.asarray(snap["vectors"]), live, k,
                                 cfg.use_kernel)
-        if cfg.quant == "pq" and self.pq_codes is not None:
+        if cfg.quant == "pq" and snap["pq_codes"] is not None:
             return _pq_ivf_search(
-                q, jnp.asarray(self.pq_codes), jnp.asarray(self.pq_codebook),
-                live, jnp.asarray(self.centroids), jnp.asarray(self.buckets),
-                jnp.asarray(self.bucket_live), cfg.nprobe, k)
-        return _ivf_search(q, jnp.asarray(self.vectors), live,
-                           jnp.asarray(self.centroids),
-                           jnp.asarray(self.buckets),
-                           jnp.asarray(self.bucket_live), cfg.nprobe, k)
+                q, jnp.asarray(snap["pq_codes"]),
+                jnp.asarray(snap["pq_codebook"]),
+                live, jnp.asarray(snap["centroids"]),
+                jnp.asarray(snap["buckets"]),
+                jnp.asarray(snap["bucket_live"]), snap["nprobe"], k)
+        return _ivf_search(q, jnp.asarray(snap["vectors"]), live,
+                           jnp.asarray(snap["centroids"]),
+                           jnp.asarray(snap["buckets"]),
+                           jnp.asarray(snap["bucket_live"]), snap["nprobe"], k)
 
     # -- misc --------------------------------------------------------------
 
@@ -410,6 +470,10 @@ class JaxVectorDB(DBInstance):
         return [chunks.get(int(c)) for c in chunk_ids]
 
     def stats(self) -> Dict[str, float]:
+        with self._mu:
+            return self._stats_locked()
+
+    def _stats_locked(self) -> Dict[str, float]:
         cfg = self.cfg
         vec_bytes = self.n_slots * cfg.dim * 4
         index_bytes = 0

@@ -14,10 +14,19 @@ from ``--config`` (JSON) or mapped from the legacy CLI flags (``--arch``,
 ``--stage-pipeline`` additionally runs the workload's query stream through
 the per-stage pipelined ``StagedExecutor`` (stage N on batch i+1 while stage
 N+1 runs batch i) and prints per-stage busy/idle/occupancy.
+
+``--elastic`` (open/closed modes) swaps the backend for the
+``ElasticExecutor``: per-stage replica pools driven by an
+``AutoscaleController`` that scales replicas/batches toward the bottleneck
+and walks the ``nprobe``/``rerank_k`` quality ladder under SLO pressure.
+``--json-out`` writes the machine-readable run document (summary, per-stage
+occupancy table, scaling events, knob timeline) for benchmarks and CI.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 from repro.core.pipeline import PipelineConfig
@@ -26,7 +35,9 @@ from repro.core.spec import PipelineSpec
 from repro.metrics.quality import evaluate_traces
 from repro.monitor.monitor import MonitorConfig, ResourceMonitor
 from repro.serving.arrival import ArrivalConfig
+from repro.serving.autoscale import AutoscaleConfig, AutoscaleController
 from repro.serving.batcher import BatchPolicy
+from repro.serving.elastic import ElasticExecutor
 from repro.serving.harness import ServingConfig, ServingHarness
 from repro.serving.staged import StagedExecutor
 from repro.workload.corpus import CorpusConfig, SyntheticCorpus
@@ -73,7 +84,9 @@ def main(argv=None):
                          "pipelined executor and print stage occupancy")
     ap.add_argument("--target-qps", type=float, default=20.0,
                     help="offered load for --mode open")
-    ap.add_argument("--slo-ms", type=float, default=500.0)
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="latency SLO (default: the spec's autoscale block "
+                         "when elastic, else 500)")
     ap.add_argument("--concurrency", type=int, default=4,
                     help="in-flight cap for --mode closed")
     ap.add_argument("--arrival", default="poisson",
@@ -82,6 +95,17 @@ def main(argv=None):
                     help="continuous-batching coalesce deadline")
     ap.add_argument("--priority", default="fifo",
                     choices=["fifo", "query_first", "mutation_first"])
+    # elastic serving flags
+    ap.add_argument("--elastic", action="store_true",
+                    help="serve through per-stage replica pools with the "
+                         "occupancy-driven autoscaler (open/closed modes)")
+    ap.add_argument("--max-replicas", type=int, default=0,
+                    help="replica cap per stage (0 = spec autoscale block)")
+    ap.add_argument("--autoscale-interval-ms", type=float, default=0.0,
+                    help="controller cadence (0 = spec autoscale block)")
+    ap.add_argument("--json-out", default="",
+                    help="write the run document (summary, per-stage "
+                         "occupancy table, scaling events) as JSON")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.target_qps <= 0:
@@ -90,9 +114,16 @@ def main(argv=None):
         ap.error("--concurrency must be >= 1")
     if not args.config and not args.arch:
         ap.error("need --config spec.json or --arch <backbone>")
+    if args.elastic and args.mode == "sync":
+        ap.error("--elastic needs --mode open or closed")
 
     spec = (PipelineSpec.from_file(args.config) if args.config
             else spec_from_args(args))
+    # --elastic forces it; otherwise the spec's autoscale block opts in
+    elastic_on = args.elastic or (args.mode != "sync"
+                                  and spec.autoscale.enabled)
+    slo_ms = (args.slo_ms if args.slo_ms is not None
+              else spec.autoscale.slo_ms if elastic_on else 500.0)
     pipe = build(spec)
     monitor = ResourceMonitor(MonitorConfig(out_path=args.monitor_out)).start()
     monitor.add_gauge("db_live", lambda: pipe.db.stats()["live"])
@@ -108,10 +139,15 @@ def main(argv=None):
         distribution=args.distribution, n_requests=args.requests,
         seed=args.seed)
 
+    json_doc = {"mode": args.mode, "elastic": elastic_on,
+                "seed": args.seed}
+
     if args.mode == "sync":
         res = run_workload(pipe, corpus, wcfg, query_batch=args.batch)
         print(f"served {args.requests} requests: {res.qps:.2f} QPS")
         print("quality:", {k: round(v, 3) for k, v in res.quality.items()})
+        json_doc["qps"] = res.qps
+        json_doc["quality"] = res.quality
     else:
         # warm the jit caches so compile time doesn't pollute the tail
         pipe.query(["warmup query"])
@@ -124,10 +160,33 @@ def main(argv=None):
             policy=BatchPolicy(max_batch=args.batch,
                                max_wait_s=args.batch_timeout_ms / 1e3,
                                priority=args.priority),
-            slo_ms=args.slo_ms, evaluate=True)
-        harness = ServingHarness(pipe, corpus, wcfg, scfg)
+            slo_ms=slo_ms, evaluate=True)
+        executor = controller = None
+        if elastic_on:
+            executor = ElasticExecutor(
+                pipe, replicas=spec.stage_replicas(),
+                batch_sizes=spec.stage_batch_sizes(),
+                default_batch=args.batch,
+                max_replicas=args.max_replicas
+                or spec.autoscale.max_replicas)
+            acfg = AutoscaleConfig.from_spec(
+                spec.autoscale, base_nprobe=executor.knobs["nprobe"],
+                base_rerank_k=executor.knobs["rerank_k"])
+            acfg.max_replicas = executor.max_replicas
+            acfg.slo_ms = slo_ms
+            if args.autoscale_interval_ms > 0:
+                acfg.interval_s = args.autoscale_interval_ms / 1e3
+            controller = AutoscaleController(acfg, executor=executor)
+        harness = ServingHarness(pipe, corpus, wcfg, scfg,
+                                 executor=executor)
         monitor.add_gauges(harness.gauges())
-        res = harness.run()
+        if controller is not None:
+            controller.start()
+        try:
+            res = harness.run()
+        finally:
+            if controller is not None:
+                controller.stop()
         s = res.summary
         if args.mode == "open":
             print(f"offered {s.get('offered_qps', 0.0):.2f} QPS "
@@ -145,10 +204,28 @@ def main(argv=None):
               f"{s.get('p95_queue_wait_ms', 0.0):.1f}; "
               f"mean batch {s.get('mean_batch_size', 1.0):.2f} "
               f"(peak queue depth {res.peak_queue_depth})")
-        print(f"SLO {args.slo_ms:.0f} ms: attainment "
+        print(f"SLO {slo_ms:.0f} ms: attainment "
               f"{s.get('slo_attainment', 0.0):.3f}, goodput "
               f"{s.get('goodput_qps', 0.0):.2f} QPS")
         print("quality:", {k: round(v, 3) for k, v in res.quality.items()})
+        json_doc["summary"] = s
+        json_doc["quality"] = res.quality
+        if executor is not None:
+            rows = [st.row() for st in executor.stats]
+            json_doc["stage_report"] = rows
+            json_doc["scaling_events"] = controller.event_dicts()
+            json_doc["knob_timeline"] = controller.knob_timeline()
+            json_doc["final_knobs"] = dict(executor.knobs)
+            json_doc["mean_write_batch"] = (
+                sum(executor.write_batches) / len(executor.write_batches)
+                if executor.write_batches else 0.0)
+            print(f"elastic: {len(controller.events)} scaling events, "
+                  f"final knobs {executor.knobs}")
+            for row in rows:
+                print(f"  {row['stage']:12s} replicas {row['replicas']:.0f}  "
+                      f"occupancy {row['occupancy']:.2f}  "
+                      f"queue_depth_max {row['queue_depth_max']:.0f}  "
+                      f"mean batch {row['mean_batch']:.1f}")
 
     if args.stage_pipeline:
         # replay the workload's query stream through the pipelined stage
@@ -157,12 +234,12 @@ def main(argv=None):
                 if r.op == "query"]
         golds = [gold_chunks_for(pipe.db, r.gold_doc_id, r.answer)
                  for r in reqs]
-        executor = StagedExecutor(pipe, default_batch=args.batch)
-        monitor.add_gauges(executor.gauges())
+        staged = StagedExecutor(pipe, default_batch=args.batch)
+        monitor.add_gauges(staged.gauges())
         pipe.traces.clear()
-        sres = executor.run([r.question for r in reqs],
-                            ground_truth=[r.answer for r in reqs],
-                            gold_chunks=golds)
+        sres = staged.run([r.question for r in reqs],
+                          ground_truth=[r.answer for r in reqs],
+                          gold_chunks=golds)
         print(f"stage-pipeline: {len(reqs)} queries at "
               f"{sres.throughput_qps:.2f} QPS (wall {sres.wall_s:.2f}s)")
         for row in sres.report():
@@ -173,6 +250,9 @@ def main(argv=None):
         quality = evaluate_traces(sres.traces, pipe.db)
         print("stage-pipeline quality:",
               {k: round(v, 3) for k, v in quality.items()})
+        json_doc["stage_pipeline"] = {
+            "throughput_qps": sres.throughput_qps, "wall_s": sres.wall_s,
+            "report": sres.report(), "quality": quality}
 
     if hasattr(pipe.llm, "stats"):
         print("gen stats:", {k: round(v, 4)
@@ -180,6 +260,13 @@ def main(argv=None):
     print("stage breakdown (s):",
           {k: round(v, 3) for k, v in pipe.breakdown().items()})
     monitor.stop()
+
+    if args.json_out:
+        json_doc["stage_breakdown"] = pipe.breakdown()
+        os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
+        with open(args.json_out, "w") as f:
+            json.dump(json_doc, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json_out}")
 
 
 if __name__ == "__main__":

@@ -114,6 +114,7 @@ class MonitorConfig:
     out_path: str = ""
     adaptive: bool = True
     max_probe_fraction: float = 0.05   # probes may use ≤5% of wall time
+    max_backoff: float = 10.0          # adaptive interval ≤ this × interval_s
     flush_on_crash: bool = True
 
 
@@ -170,9 +171,13 @@ class ResourceMonitor:
         cost = time.perf_counter() - t0
         self.probe_cost_s += cost
         if self.cfg.adaptive:
-            # keep probe time under max_probe_fraction of wall time
+            # keep probe time under max_probe_fraction of wall time, but
+            # bound the backoff: one pathological probe (e.g. live-array
+            # accounting mid index build) must not blind the monitor for
+            # the rest of the run — the period recovers at the next sample
             floor = cost / self.cfg.max_probe_fraction
-            self._interval = max(self.cfg.interval_s, floor)
+            self._interval = min(max(self.cfg.interval_s, floor),
+                                 self.cfg.interval_s * self.cfg.max_backoff)
 
     def _run(self) -> None:
         while not self._stop.wait(self._interval):
@@ -223,12 +228,19 @@ class ResourceMonitor:
 
 
 class StageTimer:
-    """Per-stage wall-clock accumulation (the component-level profile)."""
+    """Per-stage wall-clock accumulation (the component-level profile).
+
+    Accumulation is lock-protected: with replicated stage workers
+    (``ElasticExecutor``) several threads time the same stage name
+    concurrently, and the read-modify-write on ``totals`` must not lose
+    updates.
+    """
 
     def __init__(self):
         self.totals: Dict[str, float] = {}
         self.counts: Dict[str, int] = {}
         self.series: Dict[str, List[float]] = {}
+        self._lock = threading.Lock()
 
     class _Ctx:
         def __init__(self, timer: "StageTimer", name: str):
@@ -241,9 +253,10 @@ class StageTimer:
         def __exit__(self, *exc):
             dt = time.perf_counter() - self.t0
             t = self.timer
-            t.totals[self.name] = t.totals.get(self.name, 0.0) + dt
-            t.counts[self.name] = t.counts.get(self.name, 0) + 1
-            t.series.setdefault(self.name, []).append(dt)
+            with t._lock:
+                t.totals[self.name] = t.totals.get(self.name, 0.0) + dt
+                t.counts[self.name] = t.counts.get(self.name, 0) + 1
+                t.series.setdefault(self.name, []).append(dt)
             return False
 
     def stage(self, name: str) -> "_Ctx":

@@ -1,15 +1,22 @@
 """Concurrent serving layer: load generation, continuous batching, latency
-accounting (the "serving benchmark" regime on top of the offline replay in
-``repro.workload.runner``)."""
+accounting, and elastic replicated execution (the "serving benchmark" regime
+on top of the offline replay in ``repro.workload.runner``)."""
 from repro.serving.accounting import LatencyAccountant, RequestRecord, percentile
 from repro.serving.arrival import ArrivalConfig, arrival_times
+from repro.serving.autoscale import (AutoscaleConfig, AutoscaleController,
+                                     ScaleEvent, Snapshot, StageSample,
+                                     default_ladder)
 from repro.serving.batcher import BatchPolicy, ContinuousBatcher, Submission
+from repro.serving.elastic import ElasticExecutor, ElasticResult
 from repro.serving.harness import ServingConfig, ServingHarness, ServingResult
 from repro.serving.staged import StagedExecutor, StagedResult, StageStats
 
 __all__ = [
     "ArrivalConfig", "arrival_times",
+    "AutoscaleConfig", "AutoscaleController", "ScaleEvent", "Snapshot",
+    "StageSample", "default_ladder",
     "BatchPolicy", "ContinuousBatcher", "Submission",
+    "ElasticExecutor", "ElasticResult",
     "LatencyAccountant", "RequestRecord", "percentile",
     "ServingConfig", "ServingHarness", "ServingResult",
     "StagedExecutor", "StagedResult", "StageStats",

@@ -1,0 +1,510 @@
+"""Elastic replicated stage execution: per-stage replica pools + one writer.
+
+``StagedExecutor`` (PR 2) runs one worker per stage; under bursty arrivals a
+single slow stage becomes the whole pipeline's service rate and the tail
+explodes.  ``ElasticExecutor`` generalizes it to **N replica workers per
+stage** pulling from shared bounded queues (data-parallel pipeline copies at
+stage granularity — the per-stage parallelism allocation RAGO,
+arXiv 2503.14649, argues dominates RAG serving), with three runtime control
+surfaces an ``AutoscaleController`` can drive:
+
+* ``set_replicas(stage, n)``   — grow/shrink a stage's worker pool;
+* ``set_batch_size(stage, b)`` — retune a stage's coalescing micro-batch;
+* ``apply_knobs(nprobe=, rerank_k=)`` — walk the retrieval quality ladder
+  (RAG-Stack, arXiv 2510.20296: ``nprobe``/``rerank_k`` trade quality for
+  latency along a measurable Pareto front).
+
+Index mutations never touch the replica pools: ``submit_mutation`` routes
+them to a **single serialized writer thread** that coalesces pending ops and
+applies them batched (one chunking pass, one embedder call, per-doc
+insert/update under the DB's mutation lock), so replicas race on queues,
+never on ``DBInstance`` index state.
+
+Queues are item-granular: any replica of stage *k* may pull any request, so
+completion order is load-dependent; ``run()`` restores submission order and
+produces outputs identical to the lock-step path (scheduling freedom, never
+semantics).  Service mode (``submit``/``submit_mutation`` + ``drain``) backs
+``ServingHarness`` open/closed-loop serving.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.interfaces import Chunk
+from repro.core.pipeline import RAGPipeline
+from repro.core.stages import RerankStage, RetrieveStage, traces_from_batch
+from repro.serving.accounting import percentile
+from repro.serving.staged import (StagedResult, StageStats, _batch_from_items,
+                                  _Item, _scatter_to_items)
+from repro.workload.generator import Request
+
+_POLL_S = 0.02     # starved-worker poll; also bounds end-of-stream latency
+
+
+@dataclass
+class _ElasticItem(_Item):
+    """A request in flight through the replica pools, plus service timing
+    and an optional completion callback (service mode)."""
+
+    t_submit: float = 0.0
+    t_start: float = 0.0
+    on_done: Optional[Callable[["_ElasticItem"], None]] = None
+
+
+@dataclass
+class ElasticResult(StagedResult):
+    """StagedResult + the elastic run's write-path accounting."""
+
+    write_batches: List[int] = field(default_factory=list)
+
+    @property
+    def mean_write_batch(self) -> float:
+        return (sum(self.write_batches) / len(self.write_batches)
+                if self.write_batches else 0.0)
+
+
+class ElasticExecutor:
+    """Run a pipeline's stage graph as elastic replica pools.
+
+    ``replicas`` maps stage names to initial pool widths (default 1);
+    ``max_replicas`` caps runtime growth.  ``batch_sizes`` follows the
+    ``StagedExecutor`` convention (explicit override > spec-declared
+    ``batch_size`` > ``default_batch``) but is mutable at runtime.
+
+    The executor is single-shot: ``start()`` → submissions → ``drain()``
+    (or the all-in-one ``run()``).
+    """
+
+    def __init__(self, pipeline: RAGPipeline,
+                 replicas: Optional[Dict[str, int]] = None,
+                 batch_sizes: Optional[Dict[str, int]] = None,
+                 default_batch: int = 8, max_replicas: int = 4,
+                 queue_capacity: int = 512, coalesce_wait_s: float = 0.005,
+                 mutation_batch: int = 8):
+        assert default_batch >= 1 and queue_capacity >= 1
+        assert max_replicas >= 1 and mutation_batch >= 1
+        self.pipeline = pipeline
+        self.stages = list(pipeline.stages)
+        self.max_replicas = max_replicas
+        self.coalesce_wait_s = coalesce_wait_s
+        self.mutation_batch = mutation_batch
+        over = batch_sizes or {}
+        self.batch_sizes: Dict[str, int] = {
+            s.name: int(over.get(s.name, 0) or s.batch_size or default_batch)
+            for s in self.stages}
+        self.base_batch_sizes = dict(self.batch_sizes)
+        rep = replicas or {}
+        self._stage_idx = {s.name: i for i, s in enumerate(self.stages)}
+        self._target = [max(1, min(int(rep.get(s.name, 1)), max_replicas))
+                        for s in self.stages]
+        self.stats = [StageStats(name=s.name, replicas=self._target[i])
+                      for i, s in enumerate(self.stages)]
+        self.queues: List[queue.Queue] = [
+            queue.Queue(maxsize=queue_capacity)
+            for _ in range(len(self.stages) + 1)]
+        # _closed[i]: no further put to queues[i] will ever happen
+        self._closed = [threading.Event()
+                        for _ in range(len(self.stages) + 1)]
+        self._active = [0] * len(self.stages)
+        self._shrink = [0] * len(self.stages)
+        self._lock = threading.Lock()
+        self._abort = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._threads: List[threading.Thread] = []
+        self._started = False
+        # write path
+        self._wq: "queue.Queue[Tuple[Request, Optional[Callable]]]" = \
+            queue.Queue(maxsize=queue_capacity)
+        self._writer_closed = threading.Event()
+        self.write_batches: List[int] = []
+        # completion tracking
+        self._done: List[_ElasticItem] = []
+        self._next_idx = 0
+        self._recent_ms: List[float] = []     # rolling completion latencies
+        self._recent_cap = 512
+        self.n_completed = 0
+        # knob state (current values surfaced as gauges / snapshot)
+        self.knobs: Dict[str, int] = self._read_knobs()
+
+    # -- knob plumbing ------------------------------------------------------
+
+    def _read_knobs(self) -> Dict[str, int]:
+        nprobe, rerank_k = 0, 0
+        for st in self.stages:
+            if isinstance(st, RetrieveStage):
+                cfg = getattr(st.db, "cfg", None)
+                nprobe = int(getattr(cfg, "nprobe", 0) or 0)
+            if isinstance(st, RerankStage):
+                rerank_k = int(st.rerank_k)
+        return {"nprobe": nprobe, "rerank_k": rerank_k}
+
+    def apply_knobs(self, nprobe: Optional[int] = None,
+                    rerank_k: Optional[int] = None) -> None:
+        """Set retrieval quality knobs; takes effect on the next batch."""
+        for st in self.stages:
+            if nprobe is not None and isinstance(st, RetrieveStage) \
+                    and hasattr(st.db, "set_nprobe"):
+                st.db.set_nprobe(nprobe)
+                self.knobs["nprobe"] = max(1, int(nprobe))
+            if rerank_k is not None and isinstance(st, RerankStage):
+                st.rerank_k = max(1, int(rerank_k))
+                self.knobs["rerank_k"] = max(1, int(rerank_k))
+
+    # -- scaling surface ----------------------------------------------------
+
+    def replicas_of(self, stage_name: str) -> int:
+        return self._target[self._stage_idx[stage_name]]
+
+    def set_replicas(self, stage_name: str, n: int) -> int:
+        """Grow/shrink a stage's pool; returns the clamped applied target."""
+        si = self._stage_idx[stage_name]
+        n = max(1, min(int(n), self.max_replicas))
+        with self._lock:
+            cur = self._target[si]
+            if n > cur:
+                for _ in range(n - cur):
+                    self._spawn_worker_locked(si)
+            elif n < cur:
+                self._shrink[si] += cur - n
+            self._target[si] = n
+            self.stats[si].replicas = n
+        return n
+
+    def set_batch_size(self, stage_name: str, bs: int) -> int:
+        bs = max(1, int(bs))
+        self.batch_sizes[stage_name] = bs
+        return bs
+
+    # -- monitor integration ------------------------------------------------
+
+    def gauges(self) -> Dict[str, Callable[[], float]]:
+        """Queue depths, replica counts and knob values for the monitor."""
+        out: Dict[str, Callable[[], float]] = {}
+        for si, stage in enumerate(self.stages):
+            q = self.queues[si]
+            out[f"elastic_{stage.name}_queue_depth"] = \
+                (lambda q=q: float(q.qsize()))
+            out[f"elastic_{stage.name}_replicas"] = \
+                (lambda si=si: float(self._target[si]))
+        out["elastic_write_queue_depth"] = lambda: float(self._wq.qsize())
+        out["elastic_nprobe"] = lambda: float(self.knobs["nprobe"])
+        out["elastic_rerank_k"] = lambda: float(self.knobs["rerank_k"])
+        return out
+
+    def snapshot(self) -> List[Dict[str, float]]:
+        """Per-stage occupancy/backlog rows (cumulative counters; the
+        controller windows them by differencing successive snapshots)."""
+        rows = []
+        with self._lock:
+            for si, stage in enumerate(self.stages):
+                rows.append({**self.stats[si].row(),
+                             "queue_depth": float(self.queues[si].qsize()),
+                             "batch_size":
+                                 float(self.batch_sizes[stage.name])})
+        return rows
+
+    def recent_p95_ms(self) -> float:
+        with self._lock:
+            xs = list(self._recent_ms)
+        return percentile(xs, 95)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "ElasticExecutor":
+        if self._started:
+            return self
+        self._started = True
+        with self._lock:
+            for si in range(len(self.stages)):
+                for _ in range(self._target[si]):
+                    self._spawn_worker_locked(si)
+        for target, name in ((self._collector, "ragperf-elastic-sink"),
+                             (self._writer_loop, "ragperf-elastic-writer")):
+            t = threading.Thread(target=target, name=name)
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def _spawn_worker_locked(self, si: int) -> None:
+        self._active[si] += 1
+        t = threading.Thread(
+            target=self._worker, args=(si,),
+            name=f"ragperf-elastic-{self.stages[si].name}-{self._active[si]}")
+        t.start()
+        self._threads.append(t)
+
+    def close_intake(self) -> None:
+        """No further submissions; pools drain then shut down in order."""
+        self._closed[0].set()
+        self._writer_closed.set()
+
+    def drain(self) -> None:
+        """Wait until every in-flight request has completed (or the run
+        aborted), then re-raise the first worker error if any."""
+        self.close_intake()
+        while True:
+            with self._lock:
+                threads = list(self._threads)
+            for t in threads:
+                t.join()
+            with self._lock:
+                # a controller may have spawned workers mid-join; loop until
+                # the thread set is stable and fully joined
+                if len(self._threads) == len(threads):
+                    break
+        if self._error is not None:
+            raise self._error
+
+    def aborted(self) -> bool:
+        return self._abort.is_set()
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, question: str, ground_truth: str = "",
+               gold: Optional[List[int]] = None,
+               on_done: Optional[Callable[[_ElasticItem], None]] = None
+               ) -> _ElasticItem:
+        """Enqueue one query into the stage graph (service mode)."""
+        with self._lock:
+            idx = self._next_idx
+            self._next_idx += 1
+        item = _ElasticItem(idx=idx, question=question,
+                            ground_truth=ground_truth,
+                            gold=list(gold or []),
+                            t_submit=time.perf_counter(), on_done=on_done)
+        self._put_abortable(self.queues[0], item)
+        return item
+
+    def submit_mutation(self, req: Request,
+                        on_done: Optional[Callable[
+                            [Optional[BaseException]], None]] = None) -> None:
+        """Enqueue an index mutation onto the serialized writer path."""
+        assert req.op in ("insert", "update", "removal"), req.op
+        self._put_abortable(self._wq, (req, on_done))
+
+    def trace_for(self, item: _ElasticItem):
+        """Per-request §3.3.2 trace for a completed item (service mode)."""
+        return traces_from_batch(_batch_from_items([item]),
+                                 latency_s=[dict(item.latency_s)])[0]
+
+    # -- failure path -------------------------------------------------------
+
+    def _fail(self, err: BaseException) -> None:
+        with self._lock:
+            if self._error is None:
+                self._error = err
+        self._abort.set()
+
+    def _put_abortable(self, q: queue.Queue, obj) -> None:
+        while True:
+            try:
+                return q.put(obj, timeout=_POLL_S)
+            except queue.Full:
+                if self._abort.is_set():
+                    return
+
+    # -- stage workers ------------------------------------------------------
+
+    def _take_shrink(self, si: int) -> bool:
+        with self._lock:
+            if self._shrink[si] > 0 and self._active[si] > 1:
+                self._shrink[si] -= 1
+                self._active[si] -= 1
+                return True
+        return False
+
+    def _retire(self, si: int) -> None:
+        """Worker exit at end-of-stream/abort: the last one out propagates
+        closure downstream (no more puts to queues[si+1] can happen)."""
+        with self._lock:
+            self._active[si] -= 1
+            last = self._active[si] == 0
+        if last and (self._closed[si].is_set() or self._abort.is_set()):
+            self._closed[si + 1].set()
+
+    def _worker(self, si: int) -> None:
+        stage, stats = self.stages[si], self.stats[si]
+        in_q, out_q = self.queues[si], self.queues[si + 1]
+        try:
+            while not self._abort.is_set():
+                if self._take_shrink(si):
+                    return            # retired by scale-down, not stream end
+                stats.observe_depth(in_q.qsize())
+                t_wait = time.perf_counter()
+                try:
+                    first = in_q.get(timeout=_POLL_S)
+                except queue.Empty:
+                    with self._lock:
+                        stats.idle_s += time.perf_counter() - t_wait
+                    if self._closed[si].is_set() and in_q.empty():
+                        break         # end of stream for this stage
+                    continue
+                with self._lock:
+                    stats.idle_s += time.perf_counter() - t_wait
+                items = [first]
+                bs = self.batch_sizes[stage.name]
+                # deadline-triggered coalescing from the *shared* queue: wait
+                # briefly for a full micro-batch, flush at once when the
+                # stream is closed
+                deadline = time.perf_counter() + self.coalesce_wait_s
+                while len(items) < bs:
+                    try:
+                        left = deadline - time.perf_counter()
+                        if left > 0 and not self._closed[si].is_set():
+                            items.append(in_q.get(timeout=left))
+                        else:
+                            items.append(in_q.get_nowait())
+                    except queue.Empty:
+                        break
+                self._run_batch(si, stage, stats, items, out_q)
+        except BaseException as e:                   # noqa: BLE001
+            self._fail(e)
+        self._retire(si)
+
+    def _run_batch(self, si: int, stage, stats: StageStats,
+                   items: List[_ElasticItem], out_q: queue.Queue) -> None:
+        qb = _batch_from_items(items)
+        t0 = time.perf_counter()
+        if si == 0:
+            for it in items:
+                it.t_start = t0
+        qb = stage.run(qb)
+        dt = time.perf_counter() - t0
+        _scatter_to_items(qb, items)
+        with self._lock:
+            stats.busy_s += dt
+            stats.n_batches += 1
+            stats.n_items += len(items)
+        t1 = time.perf_counter()
+        for it in items:
+            self._put_abortable(out_q, it)
+        with self._lock:
+            stats.stall_s += time.perf_counter() - t1
+
+    # -- sink ---------------------------------------------------------------
+
+    def _collector(self) -> None:
+        out_q = self.queues[-1]
+        while True:
+            try:
+                item = out_q.get(timeout=_POLL_S)
+            except queue.Empty:
+                if self._abort.is_set() or (self._closed[-1].is_set()
+                                            and out_q.empty()):
+                    return
+                continue
+            lat_ms = (time.perf_counter() - item.t_submit) * 1e3
+            with self._lock:
+                self._done.append(item)
+                self.n_completed += 1
+                self._recent_ms.append(lat_ms)
+                if len(self._recent_ms) > self._recent_cap:
+                    del self._recent_ms[: -self._recent_cap]
+            if item.on_done is not None:
+                try:
+                    item.on_done(item)
+                except Exception as e:               # noqa: BLE001
+                    self._fail(e)
+
+    # -- serialized writer --------------------------------------------------
+
+    def _writer_loop(self) -> None:
+        while True:
+            try:
+                first = self._wq.get(timeout=_POLL_S)
+            except queue.Empty:
+                if self._abort.is_set() or (self._writer_closed.is_set()
+                                            and self._wq.empty()):
+                    return
+                continue
+            batch = [first]
+            while len(batch) < self.mutation_batch:
+                try:
+                    batch.append(self._wq.get_nowait())
+                except queue.Empty:
+                    break
+            err: Optional[BaseException] = None
+            try:
+                self._apply_mutations([req for req, _ in batch])
+            except Exception as e:                   # noqa: BLE001
+                # a failed write batch fails its requests, not the pipeline
+                err = e
+            self.write_batches.append(len(batch))
+            for _, cb in batch:
+                if cb is not None:
+                    cb(err)
+
+    def _apply_mutations(self, reqs: List[Request]) -> None:
+        """Batched mutation application: one chunking pass + one embedder
+        call for every pending insert/update, then per-request application
+        **in arrival order** under the DB's mutation lock — a batch holding
+        [insert(d), removal(d)] must leave d absent, exactly as the
+        sequential stream would."""
+        pipe = self.pipeline
+        upserts = [r for r in reqs if r.op in ("insert", "update")]
+        per_doc: Dict[int, List[Chunk]] = {}
+        with pipe.timer.stage("chunking"):
+            for r in upserts:
+                version = r.version or (1 if r.op == "update" else 0)
+                per_doc[id(r)] = [Chunk(-1, r.doc_id, piece, s, e,
+                                        version=version)
+                                  for s, e, piece in pipe.chunker.chunk(r.text)]
+        flat = [c for chunks in per_doc.values() for c in chunks]
+        if flat:
+            with pipe.timer.stage("embedding"):
+                vecs = pipe.embedder.embed([c.text for c in flat])
+        offsets: Dict[int, int] = {}
+        ofs = 0
+        for r in upserts:
+            offsets[id(r)] = ofs
+            ofs += len(per_doc[id(r)])
+        for r in reqs:
+            if r.op == "removal":
+                pipe.remove_document(r.doc_id)
+                continue
+            chunks = per_doc[id(r)]
+            if not chunks:
+                if r.op == "update":        # empty replacement == removal
+                    pipe.remove_document(r.doc_id)
+                continue
+            sub = vecs[offsets[id(r)]:offsets[id(r)] + len(chunks)]
+            with pipe.timer.stage("insertion"):
+                if r.op == "update":
+                    pipe.db.update(r.doc_id, sub, chunks)
+                else:
+                    pipe.db.insert(sub, chunks)
+
+    # -- batch drive (StagedExecutor-compatible) ----------------------------
+
+    def run(self, questions: Sequence[str],
+            ground_truth: Optional[Sequence[str]] = None,
+            gold_chunks: Optional[Sequence[List[int]]] = None
+            ) -> ElasticResult:
+        """Feed a query list through the pools and wait for completion;
+        outputs are sorted back to submission order and identical to the
+        lock-step path."""
+        n = len(questions)
+        self.start()
+        t0 = time.perf_counter()
+        for i, q in enumerate(questions):
+            if self._abort.is_set():
+                break
+            self.submit(q,
+                        ground_truth=ground_truth[i] if ground_truth else "",
+                        gold=list(gold_chunks[i]) if gold_chunks else [])
+        self.drain()
+        wall = time.perf_counter() - t0
+        done = sorted(self._done, key=lambda it: it.idx)
+        assert len(done) == n, f"lost items: {len(done)} != {n}"
+        traces = traces_from_batch(
+            _batch_from_items(done),
+            latency_s=[dict(it.latency_s) for it in done])
+        self.pipeline.traces.extend(traces)
+        return ElasticResult(traces=traces, wall_s=wall,
+                             throughput_qps=n / wall if wall > 0 else 0.0,
+                             stage_stats=list(self.stats),
+                             write_batches=list(self.write_batches))

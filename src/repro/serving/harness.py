@@ -7,8 +7,16 @@ endpoint (the pipeline itself is single-threaded, as one model replica is).
 Closed-loop mode runs ``concurrency`` client threads that each keep one
 request outstanding.
 
-The harness exposes ``gauges()`` (queue depth / in-flight / peak batch size)
-for ``ResourceMonitor.add_gauges`` so serving dynamics land in the same
+Passing an ``ElasticExecutor`` switches the backend: queries are injected
+straight into the replicated stage graph (stage-level coalescing replaces
+the request-level batcher) and index mutations ride the executor's
+serialized writer path, while arrivals, accounting, and SLO bookkeeping stay
+identical — so static and elastic serving are compared under the exact same
+load schedule.
+
+The harness exposes ``gauges()`` (queue depth / in-flight / peak batch size,
+plus the elastic executor's per-stage gauges when one is attached) for
+``ResourceMonitor.add_gauges`` so serving dynamics land in the same
 time-series traces as RSS/CPU/device memory.
 """
 from __future__ import annotations
@@ -51,7 +59,8 @@ class ServingResult:
 
 class ServingHarness:
     def __init__(self, pipeline, corpus: SyntheticCorpus,
-                 wcfg: WorkloadConfig, scfg: ServingConfig):
+                 wcfg: WorkloadConfig, scfg: ServingConfig,
+                 executor=None):
         if isinstance(pipeline, PipelineSpec):
             # spec path: the harness owns construction, so it also indexes
             # the corpus it is about to serve
@@ -61,6 +70,7 @@ class ServingHarness:
         self.corpus = corpus
         self.wcfg = wcfg
         self.scfg = scfg
+        self.executor = executor          # ElasticExecutor backend (optional)
         self.accountant = LatencyAccountant(slo_ms=scfg.slo_ms)
         self.batcher = ContinuousBatcher(scfg.policy)
         self.batch_sizes: List[int] = []
@@ -68,6 +78,7 @@ class ServingHarness:
         self.peak_in_flight = 0
         self._if_lock = threading.Lock()
         self._next_id = 0
+        self._outstanding: Dict[int, Submission] = {}
 
     # -- monitor integration ----------------------------------------------
 
@@ -76,12 +87,15 @@ class ServingHarness:
             return self._in_flight
 
     def gauges(self) -> Dict[str, Callable[[], float]]:
-        return {
+        out = {
             "serving_queue_depth": lambda: float(self.batcher.depth()),
             "serving_in_flight": lambda: float(self.in_flight()),
             "serving_last_batch": lambda: float(
                 self.batch_sizes[-1] if self.batch_sizes else 0),
         }
+        if self.executor is not None:
+            out.update(self.executor.gauges())
+        return out
 
     # -- submission --------------------------------------------------------
 
@@ -93,18 +107,53 @@ class ServingHarness:
             self._in_flight += 1
             self.peak_in_flight = max(self.peak_in_flight, self._in_flight)
         sub = Submission(request=req, record=rec)
-        self.batcher.submit(sub)
+        if self.executor is not None:
+            with self._if_lock:
+                self._outstanding[rec.req_id] = sub
+            self._submit_elastic(req, sub)
+        else:
+            self.batcher.submit(sub)
         return sub
 
     def _finish(self, sub: Submission, ok: bool,
                 err: Optional[BaseException] = None) -> None:
         sub.record.end_s = time.perf_counter()
+        if sub.record.start_s == 0.0:
+            sub.record.start_s = sub.record.end_s
         sub.record.ok = ok
         sub.error = err
         self.accountant.observe(sub.record)
         with self._if_lock:
             self._in_flight -= 1
+            self._outstanding.pop(sub.record.req_id, None)
         sub.done.set()
+
+    # -- elastic backend ----------------------------------------------------
+
+    def _submit_elastic(self, req: Request, sub: Submission) -> None:
+        """Route one request into the ElasticExecutor: queries through the
+        replica pools, mutations through the serialized writer."""
+        if req.op == "query":
+            def on_done(item, sub=sub, req=req):
+                sub.record.start_s = item.t_start
+                sub.record.stages = dict(item.latency_s)
+                if self.scfg.evaluate:
+                    # gold resolution happens off the arrival thread (it
+                    # scans chunk payloads) and only when quality is wanted
+                    item.gold = gold_chunks_for(self.pipeline.db,
+                                                req.gold_doc_id, req.answer)
+                    self.pipeline.traces.append(self.executor.trace_for(item))
+                self._finish(sub, ok=True)
+
+            self.executor.submit(req.question, ground_truth=req.answer,
+                                 on_done=on_done)
+        else:
+            def on_write_done(err, sub=sub):
+                # write latency is accounted end-to-end (arrival → applied);
+                # the writer does not expose a dequeue timestamp
+                self._finish(sub, ok=err is None, err=err)
+
+            self.executor.submit_mutation(req, on_done=on_write_done)
 
     # -- execution ---------------------------------------------------------
 
@@ -165,9 +214,13 @@ class ServingHarness:
     def run(self) -> ServingResult:
         acfg = self.scfg.arrival
         requests = self._materialize()
-        executor = threading.Thread(target=self._executor_loop,
-                                    name="ragperf-serving-executor")
-        executor.start()
+        executor: Optional[threading.Thread] = None
+        if self.executor is not None:
+            self.executor.start()
+        else:
+            executor = threading.Thread(target=self._executor_loop,
+                                        name="ragperf-serving-executor")
+            executor.start()
         offered: Optional[float] = None
         try:
             if acfg.mode == "open":
@@ -176,11 +229,20 @@ class ServingHarness:
             else:
                 self._drive_closed(requests)
         finally:
-            self.batcher.close()
-            executor.join()
+            if self.executor is not None:
+                self._drain_elastic()
+            else:
+                self.batcher.close()
+                executor.join()
         summary = self.accountant.summary(offered_qps=offered)
         summary["peak_in_flight"] = float(self.peak_in_flight)
-        summary["peak_queue_depth"] = float(self.batcher.peak_depth)
+        peak_depth = self.batcher.peak_depth
+        if self.executor is not None:
+            # the elastic backend bypasses the batcher; deepest stage queue
+            # is the comparable backlog figure
+            peak_depth = int(max((s.queue_depth_max
+                                  for s in self.executor.stats), default=0))
+        summary["peak_queue_depth"] = float(peak_depth)
         if self.batch_sizes:
             summary["mean_batch_size"] = (sum(self.batch_sizes)
                                           / len(self.batch_sizes))
@@ -192,8 +254,23 @@ class ServingHarness:
                              records=list(self.accountant.records),
                              batch_sizes=list(self.batch_sizes),
                              peak_in_flight=self.peak_in_flight,
-                             peak_queue_depth=self.batcher.peak_depth,
+                             peak_queue_depth=peak_depth,
                              quality=quality)
+
+    def _drain_elastic(self) -> None:
+        """Wait out the elastic executor; if it aborted, fail whatever is
+        still outstanding so closed-loop clients and callers never hang."""
+        err: Optional[BaseException] = None
+        try:
+            self.executor.drain()
+        except BaseException as e:                    # noqa: BLE001
+            err = e
+        with self._if_lock:
+            leftovers = list(self._outstanding.values())
+        for sub in leftovers:
+            self._finish(sub, ok=False, err=err)
+        if err is not None:
+            raise err
 
     def _drive_open(self, requests: List[Request]) -> None:
         acfg = self.scfg.arrival

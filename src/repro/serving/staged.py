@@ -55,7 +55,13 @@ class _Item:
 
 @dataclass
 class StageStats:
-    """Occupancy accounting for one stage worker."""
+    """Occupancy accounting for one stage worker (or replica pool).
+
+    ``row()`` is the one schema the occupancy report, the serve-CLI JSON
+    output, dashboards, and the autoscaler all share: ``batches`` and
+    ``queue_depth_max`` ride along with the busy/idle/stall split so a
+    controller can reason about backlog without a second bookkeeping path.
+    """
 
     name: str
     busy_s: float = 0.0     # inside Stage.run
@@ -63,17 +69,26 @@ class StageStats:
     stall_s: float = 0.0    # output-blocked (downstream queue full)
     n_batches: int = 0
     n_items: int = 0
+    queue_depth_max: int = 0   # deepest inbound queue seen at a pull
+    replicas: int = 1          # workers serving this stage (elastic pools)
 
     @property
     def occupancy(self) -> float:
         total = self.busy_s + self.idle_s + self.stall_s
         return self.busy_s / total if total > 0 else 0.0
 
+    def observe_depth(self, depth: int) -> None:
+        if depth > self.queue_depth_max:
+            self.queue_depth_max = depth
+
     def row(self) -> Dict[str, float]:
         return {
             "stage": self.name, "busy_s": self.busy_s, "idle_s": self.idle_s,
             "stall_s": self.stall_s, "occupancy": self.occupancy,
+            "batches": float(self.n_batches),
             "n_batches": float(self.n_batches), "n_items": float(self.n_items),
+            "queue_depth_max": float(self.queue_depth_max),
+            "replicas": float(self.replicas),
             "mean_batch": self.n_items / self.n_batches if self.n_batches
             else 0.0,
         }
@@ -219,6 +234,7 @@ class StagedExecutor:
         def pull(timeout: Optional[float]) -> bool:
             """Move one inbound batch into pending; False on timeout/close."""
             nonlocal closed
+            stats.observe_depth(in_q.qsize())
             t_wait = time.perf_counter()
             try:
                 if timeout is None:

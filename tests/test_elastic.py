@@ -1,0 +1,352 @@
+"""Elastic replicated serving: replica-pool equivalence with lock-step,
+runtime scaling/knob surfaces, the serialized batched writer, spec wiring,
+and the harness integration."""
+import queue
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import PipelineConfig, RAGPipeline
+from repro.core.spec import AutoscaleSpec, PipelineSpec, StageSpec
+from repro.serving.elastic import ElasticExecutor
+from repro.workload.corpus import CorpusConfig, SyntheticCorpus
+from repro.workload.generator import Request
+from repro.workload.runner import gold_chunks_for
+
+STAGE_NAMES = ["query_embed", "retrieval", "rerank", "generation"]
+
+
+def make_rig(n_docs=24, seed=7, index_type="flat"):
+    corpus = SyntheticCorpus(CorpusConfig(n_docs=n_docs, seed=seed))
+    pipe = RAGPipeline(PipelineConfig(index_type=index_type,
+                                      capacity=1 << 12, nlist=8,
+                                      retrieve_k=6, rerank_k=2))
+    pipe.index_documents(corpus.all_documents())
+    rng = np.random.default_rng(seed)
+    qs, ans, golds = [], [], []
+    for d in range(n_docs):
+        q, a = corpus.question_for(d, rng)
+        qs.append(q)
+        ans.append(a)
+        golds.append(gold_chunks_for(pipe.db, d, a))
+    return pipe, corpus, qs, ans, golds
+
+
+@pytest.fixture(scope="module")
+def rig():
+    return make_rig()
+
+
+def test_elastic_replicas_match_lockstep_outputs(rig):
+    """The equivalence contract: replica pools change scheduling, never
+    semantics — outputs identical to lock-step when no controller runs."""
+    pipe, _, qs, ans, golds = rig
+    pipe.traces.clear()
+    lock = []
+    for lo in range(0, len(qs), 4):
+        lock.extend(pipe.query(qs[lo:lo + 4], ground_truth=ans[lo:lo + 4],
+                               gold_chunks=golds[lo:lo + 4]))
+    pipe.traces.clear()
+    res = ElasticExecutor(pipe,
+                          replicas={"retrieval": 3, "generation": 2},
+                          default_batch=4, max_replicas=4).run(
+        qs, ground_truth=ans, gold_chunks=golds)
+    assert [t.answer for t in res.traces] == [t.answer for t in lock]
+    assert [t.retrieved_ids for t in res.traces] == \
+        [t.retrieved_ids for t in lock]
+    assert [t.reranked_ids for t in res.traces] == \
+        [t.reranked_ids for t in lock]
+    assert [t.query for t in res.traces] == qs          # submission order
+    assert pipe.traces == res.traces
+
+
+def test_elastic_accounts_every_item(rig):
+    pipe, _, qs, ans, golds = rig
+    pipe.traces.clear()
+    ex = ElasticExecutor(pipe, replicas={"generation": 2}, default_batch=8,
+                         max_replicas=4)
+    res = ex.run(qs, ground_truth=ans, gold_chunks=golds)
+    assert res.throughput_qps > 0
+    assert [s.name for s in res.stage_stats] == STAGE_NAMES
+    for s in res.stage_stats:
+        assert s.n_items == len(qs), s.name
+        assert s.busy_s > 0
+    by = {s.name: s for s in res.stage_stats}
+    assert by["generation"].replicas == 2
+    pipe.traces.clear()
+
+
+def test_elastic_row_schema_has_autoscaler_fields(rig):
+    """Satellite: occupancy rows carry queue_depth_max/batches/replicas so
+    executor report, dashboards and the controller share one schema."""
+    pipe, _, qs, ans, golds = rig
+    pipe.traces.clear()
+    ex = ElasticExecutor(pipe, default_batch=4)
+    res = ex.run(qs[:8], ground_truth=ans[:8], gold_chunks=golds[:8])
+    for row in res.report():
+        assert {"stage", "busy_s", "idle_s", "stall_s", "occupancy",
+                "batches", "n_batches", "queue_depth_max", "replicas",
+                "mean_batch"} <= set(row)
+    pipe.traces.clear()
+
+
+def test_set_replicas_grows_and_shrinks_pool(rig):
+    pipe, _, qs, ans, golds = rig
+    pipe.traces.clear()
+    ex = ElasticExecutor(pipe, default_batch=4, max_replicas=3).start()
+    assert ex.set_replicas("retrieval", 3) == 3
+    assert ex.replicas_of("retrieval") == 3
+    # clamped at max_replicas and at 1
+    assert ex.set_replicas("retrieval", 99) == 3
+    assert ex.set_replicas("retrieval", 0) == 1
+    assert ex.replicas_of("retrieval") == 1
+    res = ex.run(qs, ground_truth=ans, gold_chunks=golds)
+    assert len(res.traces) == len(qs)
+    pipe.traces.clear()
+
+
+def test_apply_knobs_changes_db_and_rerank(rig):
+    pipe, _, qs, ans, golds = rig
+    ex = ElasticExecutor(pipe, default_batch=4)
+    base = dict(ex.knobs)
+    ex.apply_knobs(nprobe=2, rerank_k=1)
+    assert ex.knobs == {"nprobe": 2, "rerank_k": 1}
+    assert pipe.db.cfg.nprobe == 2
+    assert pipe.stages[2].rerank_k == 1
+    ex.apply_knobs(nprobe=base["nprobe"] or 8, rerank_k=base["rerank_k"])
+
+
+def test_knob_step_down_changes_contexts_not_crash():
+    """Degraded knobs still produce well-formed (narrower) contexts."""
+    pipe, _, qs, ans, golds = make_rig(n_docs=12, seed=3, index_type="ivf")
+    ex = ElasticExecutor(pipe, default_batch=4)
+    ex.apply_knobs(nprobe=1, rerank_k=1)
+    res = ex.run(qs[:8], ground_truth=ans[:8], gold_chunks=golds[:8])
+    assert all(len(t.reranked_ids) <= 1 for t in res.traces)
+
+
+def test_serialized_writer_applies_batched_mutations():
+    pipe, corpus, qs, ans, golds = make_rig(n_docs=12, seed=5)
+    ex = ElasticExecutor(pipe, default_batch=4, mutation_batch=4).start()
+    applied = []
+    done = threading.Event()
+    n_muts = 6
+    new_doc0 = corpus.cfg.n_docs + 100
+
+    def on_write(err, i=None):
+        applied.append(err)
+        if len(applied) == n_muts:
+            done.set()
+
+    live_before = pipe.db.stats()["live"]
+    for i in range(n_muts):
+        ex.submit_mutation(Request(op="insert", step=i,
+                                   doc_id=new_doc0 + i,
+                                   text=f"the color of thing{i} is blue."),
+                           on_done=on_write)
+    assert done.wait(timeout=10.0)
+    assert all(e is None for e in applied)
+    assert pipe.db.stats()["live"] > live_before
+    ex.drain()
+    # coalescing happened: fewer write batches than mutations
+    assert sum(ex.write_batches) == n_muts
+    assert len(ex.write_batches) <= n_muts
+
+
+def test_writer_update_and_removal_roundtrip():
+    pipe, corpus, qs, ans, golds = make_rig(n_docs=10, seed=11)
+    ex = ElasticExecutor(pipe, default_batch=4).start()
+    done = threading.Event()
+    errs = []
+
+    def cb(err):
+        errs.append(err)
+        if len(errs) == 2:
+            done.set()
+
+    ex.submit_mutation(Request(op="update", step=0, doc_id=3,
+                               text="the mass of widget is 4kg.", version=2),
+                       on_done=cb)
+    ex.submit_mutation(Request(op="removal", step=1, doc_id=7), on_done=cb)
+    assert done.wait(timeout=10.0)
+    assert errs == [None, None]
+    ex.drain()
+    assert 7 not in pipe.db.doc_slots
+    texts = [pipe.db.get_chunk(s).text for s in pipe.db.doc_slots[3]]
+    assert any("4kg" in t for t in texts)
+
+
+def test_writer_batch_preserves_same_doc_op_order():
+    """A coalesced write batch holding [insert(d), removal(d)] must leave
+    d absent — batched application keeps sequential stream semantics."""
+    pipe, corpus, _, _, _ = make_rig(n_docs=8, seed=17)
+    ex = ElasticExecutor(pipe, default_batch=4, mutation_batch=8)
+    doc = 500
+    ex._apply_mutations([
+        Request(op="insert", step=0, doc_id=doc,
+                text="the hue of gadget is green."),
+        Request(op="removal", step=1, doc_id=doc),
+    ])
+    assert doc not in pipe.db.doc_slots
+    # and the reverse order leaves it live
+    ex._apply_mutations([
+        Request(op="removal", step=2, doc_id=doc),
+        Request(op="insert", step=3, doc_id=doc,
+                text="the hue of gadget is green."),
+    ])
+    assert doc in pipe.db.doc_slots
+
+
+def test_elastic_stage_exception_propagates_not_deadlocks(rig):
+    pipe, _, qs, ans, golds = rig
+    pipe.traces.clear()
+
+    class _Boom(Exception):
+        pass
+
+    ex = ElasticExecutor(pipe, replicas={"generation": 2}, default_batch=4,
+                         max_replicas=2)
+    original = ex.stages[3]._apply
+
+    def explode(batch):
+        raise _Boom("generation backend died")
+
+    ex.stages[3]._apply = explode
+    try:
+        with pytest.raises(_Boom, match="generation backend died"):
+            ex.run(qs, ground_truth=ans, gold_chunks=golds)
+    finally:
+        ex.stages[3]._apply = original
+        pipe.traces.clear()
+
+
+def test_elastic_gauges_cover_replicas_queues_knobs(rig):
+    pipe, _, _, _, _ = rig
+    ex = ElasticExecutor(pipe, default_batch=4)
+    g = ex.gauges()
+    for n in STAGE_NAMES:
+        assert f"elastic_{n}_queue_depth" in g
+        assert f"elastic_{n}_replicas" in g
+    assert {"elastic_write_queue_depth", "elastic_nprobe",
+            "elastic_rerank_k"} <= set(g)
+    for fn in g.values():
+        assert isinstance(fn(), float)
+
+
+def test_spec_replicas_and_autoscale_round_trip():
+    spec = PipelineSpec(
+        vectordb=StageSpec("jax", {"index_type": "flat"}, replicas=3),
+        llm=StageSpec("extractive", batch_size=4, replicas=2),
+        autoscale=AutoscaleSpec(enabled=True, max_replicas=6,
+                                interval_ms=50.0, slo_ms=80.0,
+                                ladder=[[8, 3], [2, 1]]))
+    again = PipelineSpec.from_dict(spec.to_dict())
+    assert again == spec
+    assert PipelineSpec.from_json(spec.to_json()) == spec
+    assert spec.stage_replicas() == {"query_embed": 1, "retrieval": 3,
+                                     "rerank": 1, "generation": 2}
+    with pytest.raises(ValueError, match="AutoscaleSpec"):
+        AutoscaleSpec.from_dict({"enabled": True, "max_replica": 2})
+    # legacy spec dicts without the new keys still load
+    d = spec.to_dict()
+    del d["autoscale"]
+    for k in d:
+        if isinstance(d[k], dict) and "replicas" in d[k]:
+            del d[k]["replicas"]
+    legacy = PipelineSpec.from_dict(d)
+    assert legacy.vectordb.replicas == 1
+    assert legacy.autoscale == AutoscaleSpec()
+
+
+def test_harness_elastic_backend_accounts_all_requests():
+    from repro.serving.arrival import ArrivalConfig
+    from repro.serving.batcher import BatchPolicy
+    from repro.serving.harness import ServingConfig, ServingHarness
+    from repro.workload.generator import WorkloadConfig
+
+    pipe, corpus, _, _, _ = make_rig(n_docs=12, seed=9)
+    pipe.traces.clear()
+    wcfg = WorkloadConfig(query_frac=0.8, update_frac=0.2, n_requests=25,
+                          seed=9)
+    scfg = ServingConfig(
+        arrival=ArrivalConfig(mode="open", target_qps=300.0, n_requests=25,
+                              seed=9),
+        policy=BatchPolicy(max_batch=4, max_wait_s=0.005),
+        slo_ms=500.0, evaluate=True)
+    ex = ElasticExecutor(pipe, default_batch=4, max_replicas=2)
+    h = ServingHarness(pipe, corpus, wcfg, scfg, executor=ex)
+    g = h.gauges()
+    assert "elastic_retrieval_replicas" in g     # executor gauges merged
+    res = h.run()
+    assert res.summary["n_requests"] == 25
+    assert res.summary["n_queries"] > 0
+    assert res.summary.get("n_mutations", 0) > 0
+    # per-request stage attribution came from the item latency dicts
+    qrecs = [r for r in res.records if r.op == "query"]
+    assert all(set(r.stages) == set(STAGE_NAMES) for r in qrecs)
+    assert res.quality.get("context_recall", 0.0) > 0.3
+    pipe.traces.clear()
+
+
+@pytest.mark.slow
+def test_elastic_live_autoscale_bursty_soak():
+    """End-to-end control loop under bursty pressure: the controller must
+    emit scaling events, every request must complete, and the recorded
+    snapshot stream must replay to the identical event sequence."""
+    from repro.serving.arrival import ArrivalConfig
+    from repro.serving.autoscale import AutoscaleConfig, AutoscaleController
+    from repro.serving.batcher import BatchPolicy
+    from repro.serving.harness import ServingConfig, ServingHarness
+    from repro.workload.generator import WorkloadConfig
+
+    pipe, corpus, _, _, _ = make_rig(n_docs=24, seed=21, index_type="ivf")
+    pipe.traces.clear()
+    pipe.query(["warmup"])
+    pipe.traces.clear()
+    n = 120
+    wcfg = WorkloadConfig(query_frac=0.95, update_frac=0.05, n_requests=n,
+                          seed=21)
+    scfg = ServingConfig(
+        arrival=ArrivalConfig(mode="open", process="bursty",
+                              target_qps=250.0, n_requests=n, seed=21),
+        policy=BatchPolicy(max_batch=8, max_wait_s=0.005),
+        slo_ms=50.0)
+    ex = ElasticExecutor(pipe, default_batch=8, max_replicas=4)
+    ctl = AutoscaleController(
+        AutoscaleConfig(interval_s=0.04, max_replicas=4, slo_ms=50.0),
+        executor=ex)
+    h = ServingHarness(pipe, corpus, wcfg, scfg, executor=ex)
+    ctl.start()
+    try:
+        res = h.run()
+    finally:
+        ctl.stop()
+    assert res.summary["n_requests"] == n
+    assert len(ctl.events) >= 1                   # the loop actually acted
+    assert [e.to_dict() for e in ctl.replay_events()] == \
+        [e.to_dict() for e in ctl.events]
+    pipe.traces.clear()
+
+
+def test_harness_elastic_closed_loop_finishes():
+    from repro.serving.arrival import ArrivalConfig
+    from repro.serving.batcher import BatchPolicy
+    from repro.serving.harness import ServingConfig, ServingHarness
+    from repro.workload.generator import WorkloadConfig
+
+    pipe, corpus, _, _, _ = make_rig(n_docs=10, seed=13)
+    pipe.traces.clear()
+    wcfg = WorkloadConfig(query_frac=1.0, update_frac=0.0, n_requests=16,
+                          seed=13)
+    scfg = ServingConfig(
+        arrival=ArrivalConfig(mode="closed", concurrency=3, n_requests=16,
+                              seed=13),
+        policy=BatchPolicy(max_batch=4, max_wait_s=0.005),
+        slo_ms=500.0)
+    ex = ElasticExecutor(pipe, default_batch=4)
+    res = ServingHarness(pipe, corpus, wcfg, scfg, executor=ex).run()
+    assert res.summary["n_requests"] == 16
+    assert res.peak_in_flight <= 3
+    pipe.traces.clear()
