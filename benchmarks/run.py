@@ -8,8 +8,8 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (accuracy_eval, elastic_scaling, index_schemes,
-                        indexing_breakdown, monitor_overhead,
+from benchmarks import (accuracy_eval, elastic_scaling, gen_engine,
+                        index_schemes, indexing_breakdown, monitor_overhead,
                         query_breakdown, resource_limits,
                         resource_utilization, sensitivity, serving,
                         stage_pipeline, update_workload)
@@ -28,6 +28,7 @@ MODULES = {
     "serving": serving,                       # open/closed-loop QPS sweep
     "stage_pipeline": stage_pipeline,         # lock-step vs pipelined stages
     "elastic_scaling": elastic_scaling,       # static vs elastic + knob ladder
+    "gen_engine": gen_engine,                 # lock-step vs continuous batching
 }
 
 

@@ -20,4 +20,9 @@ echo "== tier-1: elastic scaling smoke (static vs elastic, bursty) =="
 # lock-step with control disabled, scaling events replay deterministically
 python -m benchmarks.elastic_scaling --smoke --check > /dev/null
 
+echo "== tier-1: continuous-batching gen engine smoke =="
+# --check asserts: engine outputs identical to lock-step ModelLLM and a
+# TTFT p95 win under the bursty mixed-prompt-length workload
+python -m benchmarks.gen_engine --smoke --check > /dev/null
+
 echo "tier-1 OK"

@@ -66,6 +66,49 @@ class StageSpec:
 
 
 @dataclass
+class GenSpec:
+    """Continuous-batching generation engine settings
+    (``repro.serving.genengine``).
+
+    When ``enabled`` and the llm slot names the ``model`` component, the
+    pipeline is built with the token-level engine (``model_engine``) instead
+    of the lock-step generator: ``slots`` KV-cache slots, ``chunk_tokens``
+    chunked-prefill granularity, ``prefill_chunks_per_step`` chunks of
+    prefill budget between decode steps, and the ``admission`` policy
+    (``fcfs`` | ``sjf``).
+    """
+
+    enabled: bool = False
+    slots: int = 4
+    chunk_tokens: int = 32
+    prefill_chunks_per_step: int = 1
+    admission: str = "fcfs"
+
+    _KEYS = ("enabled", "slots", "chunk_tokens", "prefill_chunks_per_step",
+             "admission")
+
+    def __post_init__(self):
+        assert self.slots >= 1 and self.chunk_tokens >= 1
+        assert self.prefill_chunks_per_step >= 1
+        assert self.admission in ("fcfs", "sjf"), self.admission
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {k: getattr(self, k) for k in self._KEYS}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "GenSpec":
+        unknown = set(d) - set(cls._KEYS)
+        if unknown:
+            raise ValueError(f"unknown GenSpec keys: {sorted(unknown)}")
+        return cls(enabled=bool(d.get("enabled", False)),
+                   slots=int(d.get("slots", 4)),
+                   chunk_tokens=int(d.get("chunk_tokens", 32)),
+                   prefill_chunks_per_step=int(
+                       d.get("prefill_chunks_per_step", 1)),
+                   admission=str(d.get("admission", "fcfs")))
+
+
+@dataclass
 class AutoscaleSpec:
     """Controller settings for elastic serving (``repro.serving.autoscale``).
 
@@ -122,6 +165,7 @@ class PipelineSpec:
     retrieve_k: int = 16          # initial retrieval depth
     rerank_k: int = 4             # context depth passed to generation
     autoscale: AutoscaleSpec = field(default_factory=AutoscaleSpec)
+    gen: GenSpec = field(default_factory=GenSpec)
 
     def stage(self, kind: str) -> StageSpec:
         assert kind in COMPONENT_KINDS, kind
@@ -145,12 +189,13 @@ class PipelineSpec:
             "retrieve_k": self.retrieve_k,
             "rerank_k": self.rerank_k,
             "autoscale": self.autoscale.to_dict(),
+            "gen": self.gen.to_dict(),
         }
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "PipelineSpec":
         unknown = (set(d) - set(COMPONENT_KINDS)
-                   - {"retrieve_k", "rerank_k", "autoscale"})
+                   - {"retrieve_k", "rerank_k", "autoscale", "gen"})
         if unknown:
             raise ValueError(f"unknown PipelineSpec keys: {sorted(unknown)}")
         kw: Dict[str, Any] = {}
@@ -163,6 +208,8 @@ class PipelineSpec:
             kw["rerank_k"] = int(d["rerank_k"])
         if "autoscale" in d:
             kw["autoscale"] = AutoscaleSpec.from_dict(d["autoscale"])
+        if "gen" in d:
+            kw["gen"] = GenSpec.from_dict(d["gen"])
         return cls(**kw)
 
     def to_json(self, indent: int = 2) -> str:

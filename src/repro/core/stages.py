@@ -87,6 +87,15 @@ class Stage(abc.ABC):
                 + (time.perf_counter() - t0) / len(batch))
         return batch
 
+    def replica_copy(self) -> "Stage":
+        """A stage instance safe for one extra replica worker.
+
+        Stages over shared thread-safe components return ``self``; stages
+        holding per-worker state (the generation engine's KV slot pool)
+        override this to hand each replica its own instance.
+        """
+        return self
+
     @abc.abstractmethod
     def _apply(self, batch: QueryBatch) -> None:
         """Fill in this stage's output fields on the batch, in place."""
@@ -163,6 +172,17 @@ class GenerateStage(Stage):
         assert batch.contexts is not None, \
             "GenerateStage needs RerankStage output"
         batch.answers = self.llm.generate(batch.questions, batch.contexts)
+
+    def replica_copy(self) -> "GenerateStage":
+        """Per-replica engines: an LLM exposing ``clone()`` (ModelLLM /
+        EngineLLM) gets a warm copy per worker — own KV slot pool, shared
+        params and thread-safe GenStats — which is what makes replicating
+        the generation stage legal."""
+        if not hasattr(self.llm, "clone"):
+            return self
+        twin = GenerateStage(self.llm.clone(), batch_size=self.batch_size,
+                             timer=self.timer)
+        return twin
 
 
 def traces_from_batch(batch: QueryBatch,

@@ -31,7 +31,7 @@ import time
 
 from repro.core.pipeline import PipelineConfig
 from repro.core.registry import build
-from repro.core.spec import PipelineSpec
+from repro.core.spec import GenSpec, PipelineSpec
 from repro.metrics.quality import evaluate_traces
 from repro.monitor.monitor import MonitorConfig, ResourceMonitor
 from repro.serving.arrival import ArrivalConfig
@@ -76,6 +76,17 @@ def main(argv=None):
                     choices=["uniform", "zipfian"])
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--monitor-out", default="")
+    # continuous-batching generation engine (token-level scheduling)
+    ap.add_argument("--gen-engine", action="store_true",
+                    help="serve generation through the token-level "
+                         "continuous-batching engine (model llm only)")
+    ap.add_argument("--gen-slots", type=int, default=4,
+                    help="KV-cache slot pool size for --gen-engine")
+    ap.add_argument("--gen-chunk", type=int, default=32,
+                    help="chunked-prefill granularity for --gen-engine")
+    ap.add_argument("--gen-admission", default="fcfs",
+                    choices=["fcfs", "sjf"],
+                    help="slot admission policy for --gen-engine")
     # serving-mode flags
     ap.add_argument("--mode", default="sync",
                     choices=["sync", "open", "closed"])
@@ -119,6 +130,13 @@ def main(argv=None):
 
     spec = (PipelineSpec.from_file(args.config) if args.config
             else spec_from_args(args))
+    if args.gen_engine:
+        if spec.llm.component != "model":
+            ap.error("--gen-engine needs the 'model' llm "
+                     "(--arch or a spec with llm.component == 'model')")
+        spec = spec.replace(gen=GenSpec(
+            enabled=True, slots=args.gen_slots, chunk_tokens=args.gen_chunk,
+            admission=args.gen_admission))
     # --elastic forces it; otherwise the spec's autoscale block opts in
     elastic_on = args.elastic or (args.mode != "sync"
                                   and spec.autoscale.enabled)
@@ -171,7 +189,8 @@ def main(argv=None):
                 or spec.autoscale.max_replicas)
             acfg = AutoscaleConfig.from_spec(
                 spec.autoscale, base_nprobe=executor.knobs["nprobe"],
-                base_rerank_k=executor.knobs["rerank_k"])
+                base_rerank_k=executor.knobs["rerank_k"],
+                base_max_new=executor.knobs.get("max_new", 0))
             acfg.max_replicas = executor.max_replicas
             acfg.slo_ms = slo_ms
             if args.autoscale_interval_ms > 0:
@@ -254,9 +273,15 @@ def main(argv=None):
             "throughput_qps": sres.throughput_qps, "wall_s": sres.wall_s,
             "report": sres.report(), "quality": quality}
 
-    if hasattr(pipe.llm, "stats"):
-        print("gen stats:", {k: round(v, 4)
-                             for k, v in pipe.llm.stats.summary().items()})
+    # capability check, not attribute faith: backends without generation
+    # metrics (e.g. ExtractiveLLM) still get an (empty) gen block in the
+    # JSON document instead of an AttributeError
+    llm_stats = getattr(pipe.llm, "stats", None)
+    gen_block = (llm_stats.summary()
+                 if hasattr(llm_stats, "summary") else {})
+    json_doc["gen"] = gen_block
+    if gen_block:
+        print("gen stats:", {k: round(v, 4) for k, v in gen_block.items()})
     print("stage breakdown (s):",
           {k: round(v, 3) for k, v in pipe.breakdown().items()})
     monitor.stop()

@@ -257,27 +257,41 @@ def cached_attention_step(
     x,            # [B, 1, D]
     cache_k,      # [B, max_len, n_kv, hd]
     cache_v,
-    index,        # scalar int32: write position
+    index,        # scalar int32 write position, or [B] per-row positions
     cfg: ModelConfig,
     *,
     window: int = 0,
     positions_3d=None,
 ):
-    """One decode step with a KV cache; returns (out, cache_k, cache_v)."""
+    """One decode step with a KV cache; returns (out, cache_k, cache_v).
+
+    ``index`` may be a scalar (lock-step decode: the whole batch sits at one
+    position) or a ``[B]`` vector (continuous batching: every cache row is an
+    independent sequence at its own decode position).
+    """
     hd = cfg.resolved_head_dim
     B = x.shape[0]
+    per_row = jnp.ndim(index) == 1
     q = _split_heads(x @ params["wq"], cfg.n_heads, hd)          # [B,1,H,hd]
     k = _split_heads(x @ params["wk"], cfg.n_kv_heads, hd)
     v = _split_heads(x @ params["wv"], cfg.n_kv_heads, hd)
-    pos = jnp.full((B, 1), index, dtype=jnp.int32)
+    if per_row:
+        pos = index.astype(jnp.int32).reshape(B, 1)
+    else:
+        pos = jnp.full((B, 1), index, dtype=jnp.int32)
     if cfg.rope_type == "mrope" and positions_3d is not None:
         q = apply_mrope(q, positions_3d, cfg.rope_theta, cfg.mrope_sections)
         k = apply_mrope(k, positions_3d, cfg.rope_theta, cfg.mrope_sections)
     elif cfg.rope_type in ("rope", "mrope"):
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), index, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), index, axis=1)
+    if per_row:
+        rows = jnp.arange(B)
+        cache_k = cache_k.at[rows, pos[:, 0]].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, pos[:, 0]].set(v[:, 0].astype(cache_v.dtype))
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), index, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), index, axis=1)
     n_rep = cfg.n_heads // cfg.n_kv_heads
     # grouped-query decode: score directly against the packed KV cache
     q = q.reshape(B, 1, cfg.n_kv_heads, n_rep, hd)
@@ -287,13 +301,62 @@ def cached_attention_step(
         c = cfg.attn_logit_softcap
         scores = c * jnp.tanh(scores / c)
     kpos = jnp.arange(cache_k.shape[1])
-    ok = kpos <= index
+    ok = kpos[None, :] <= pos            # [B, M] (broadcasts on the scalar path)
     if window > 0:
-        ok &= kpos > index - window
-    scores = jnp.where(ok[None, None, None, None, :], scores, -jnp.inf)
+        ok &= kpos[None, :] > pos - window
+    scores = jnp.where(ok[:, None, None, None, :], scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = jnp.einsum("bkrqm,bmkd->bqkrd", probs, cache_v)
     out = out.reshape(B, 1, cfg.n_heads * hd) @ params["wo"]
+    return out, cache_k, cache_v
+
+
+def cached_attention_chunk(
+    params,
+    x,            # [B, C, D]: one prompt chunk
+    cache_k,      # [B, max_len, n_kv, hd]
+    cache_v,
+    offset,       # scalar int32: absolute position of the chunk's first token
+    cfg: ModelConfig,
+    *,
+    window: int = 0,
+):
+    """Chunked-prefill attention: C prompt tokens at absolute positions
+    [offset, offset+C) attend causally to earlier chunks already in the cache
+    plus themselves.  Returns (out [B, C, D'], cache_k, cache_v).
+
+    Cache contents at positions > the current query position are masked out,
+    so stale K/V left behind by a slot's previous occupant is never attended.
+    """
+    hd = cfg.resolved_head_dim
+    B, C = x.shape[:2]
+    q = _split_heads(x @ params["wq"], cfg.n_heads, hd)          # [B,C,H,hd]
+    k = _split_heads(x @ params["wk"], cfg.n_kv_heads, hd)
+    v = _split_heads(x @ params["wv"], cfg.n_kv_heads, hd)
+    pos = offset + jnp.arange(C, dtype=jnp.int32)                # [C]
+    posb = jnp.broadcast_to(pos[None, :], (B, C))
+    if cfg.rope_type in ("rope", "mrope"):
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k = apply_rope(k, posb, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), offset, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), offset, axis=1)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q = q.reshape(B, C, cfg.n_kv_heads, n_rep, hd)
+    scores = jnp.einsum("bqkrd,bmkd->bkrqm", q, cache_k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if cfg.attn_logit_softcap > 0:
+        c = cfg.attn_logit_softcap
+        scores = c * jnp.tanh(scores / c)
+    kpos = jnp.arange(cache_k.shape[1])
+    ok = kpos[None, :] <= pos[:, None]                           # [C, M]
+    if window > 0:
+        ok &= kpos[None, :] > pos[:, None] - window
+    scores = jnp.where(ok[None, None, None, :, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkrqm,bmkd->bqkrd", probs, cache_v)
+    out = out.reshape(B, C, cfg.n_heads * hd) @ params["wo"]
     return out, cache_k, cache_v
 
 

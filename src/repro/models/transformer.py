@@ -178,10 +178,14 @@ def cache_spec_logical():
 
 
 def prefill(params, cfg: ModelConfig, batch: Dict, cache: Dict,
-            moe_impl: str = "sort"):
+            moe_impl: str = "sort", lengths=None):
     """Run the prompt through the model, filling the cache.
 
-    Returns (last-position logits [B, V], cache).
+    Returns (last-position logits [B, V], cache).  With ``lengths`` ([B]
+    int32: per-row real prompt lengths), the logits are gathered at each
+    row's last *real* token instead of the shared padded last position, and
+    ``cache["pos"]`` becomes the per-row position vector — right-padding
+    stops leaking into generation (the continuous-batching contract).
     """
     x = embed_inputs(params, cfg, batch)
     B, S = x.shape[:2]
@@ -223,8 +227,15 @@ def prefill(params, cfg: ModelConfig, batch: Dict, cache: Dict,
         cache["k"], ks.astype(cache["k"].dtype), 0, axis=2)
     cache["v"] = jax.lax.dynamic_update_slice_in_dim(
         cache["v"], vs.astype(cache["v"].dtype), 0, axis=2)
-    cache["pos"] = jnp.asarray(S, jnp.int32)
-    x = L.rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    if lengths is None:
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        x = x[:, -1:]
+    else:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        cache["pos"] = lengths
+        last = jnp.clip(lengths - 1, 0, S - 1)
+        x = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = (x @ _lm_head(params, cfg))[:, 0]
     return logits, cache
 
@@ -233,15 +244,20 @@ def decode_step(params, cfg: ModelConfig, batch: Dict, cache: Dict,
                 moe_impl: str = "sort"):
     """One-token decode.  batch: {"tokens": [B,1]} (or {"embeds": [B,1,D]}).
 
-    Returns (logits [B, V], cache).
+    ``cache["pos"]`` may be a scalar (lock-step: one shared position) or a
+    [B] vector (continuous batching: per-row positions).  Returns
+    (logits [B, V], cache).
     """
     x = embed_inputs(params, cfg, batch)
     B = x.shape[0]
     index = cache["pos"]
     positions_3d = None
     if cfg.rope_type == "mrope":
-        positions_3d = jnp.broadcast_to(
-            jnp.full((B, 1), index, dtype=jnp.int32)[None], (3, B, 1))
+        if jnp.ndim(index) == 1:
+            pos2 = index.astype(jnp.int32).reshape(B, 1)
+        else:
+            pos2 = jnp.full((B, 1), index, dtype=jnp.int32)
+        positions_3d = jnp.broadcast_to(pos2[None], (3, B, 1))
 
     def body(x, xs):
         lp, ck, cv = xs
@@ -264,4 +280,37 @@ def decode_step(params, cfg: ModelConfig, batch: Dict, cache: Dict,
     cache = {"k": ck, "v": cv, "pos": index + 1}
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = (x @ _lm_head(params, cfg))[:, 0]
+    return logits, cache
+
+
+def prefill_chunk(params, cfg: ModelConfig, batch: Dict, cache: Dict,
+                  offset, moe_impl: str = "sort"):
+    """Chunked prefill: run C prompt tokens at absolute positions
+    [offset, offset+C) against the existing cache (earlier chunks of the same
+    sequence live at positions < offset).
+
+    Unlike ``prefill`` this returns the *full* chunk logits [B, C, V] so the
+    caller can gather the last real token's logits when the final chunk is
+    right-padded; ``cache["pos"]`` is left for the caller to manage (the
+    continuous-batching engine tracks per-slot positions itself).
+    """
+    x = embed_inputs(params, cfg, batch)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        h = L.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        a, ck, cv = L.cached_attention_chunk(
+            lp["attn"], h, ck, cv, offset, cfg, window=cfg.attn_window)
+        x = x + a
+        h = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.moe is not None:
+            h, _ = moe_lib.moe_apply(lp["moe"], h, cfg, moe_impl)
+        else:
+            h = L.mlp_apply(lp["mlp"], h, cfg.activation)
+        return x + h, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    cache = dict(cache, k=ck, v=cv)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ _lm_head(params, cfg)           # [B, C, V]
     return logits, cache

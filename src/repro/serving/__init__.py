@@ -8,6 +8,7 @@ from repro.serving.autoscale import (AutoscaleConfig, AutoscaleController,
                                      default_ladder)
 from repro.serving.batcher import BatchPolicy, ContinuousBatcher, Submission
 from repro.serving.elastic import ElasticExecutor, ElasticResult
+from repro.serving.genengine import EngineLLM, GenEngine, GenRequest
 from repro.serving.harness import ServingConfig, ServingHarness, ServingResult
 from repro.serving.staged import StagedExecutor, StagedResult, StageStats
 
@@ -17,6 +18,7 @@ __all__ = [
     "StageSample", "default_ladder",
     "BatchPolicy", "ContinuousBatcher", "Submission",
     "ElasticExecutor", "ElasticResult",
+    "EngineLLM", "GenEngine", "GenRequest",
     "LatencyAccountant", "RequestRecord", "percentile",
     "ServingConfig", "ServingHarness", "ServingResult",
     "StagedExecutor", "StagedResult", "StageStats",

@@ -33,19 +33,36 @@ from repro.core.spec import AutoscaleSpec
 from repro.serving.elastic import ElasticExecutor
 
 
-def default_ladder(nprobe: int, rerank_k: int) -> List[Tuple[int, int]]:
+def default_ladder(nprobe: int, rerank_k: int, max_new: int = 0
+                   ) -> List[Tuple[int, ...]]:
     """Quality ladder from the configured knobs down to the cheapest step:
-    halve ``nprobe`` first (retrieval cost is the steep axis), then halve
-    ``rerank_k``."""
+    halve ``nprobe`` first (retrieval cost is the steep axis), then
+    ``rerank_k``, then — when the generation backend exposes the knob —
+    ``max_new`` (decode length, floored at a quarter of the configured
+    value: shorter answers, never no answer)."""
     nprobe, rerank_k = max(1, int(nprobe)), max(1, int(rerank_k))
-    steps = [(nprobe, rerank_k)]
-    while steps[-1] != (1, 1):
-        np_, rk = steps[-1]
+    if max_new <= 0:
+        steps: List[Tuple[int, ...]] = [(nprobe, rerank_k)]
+        while steps[-1] != (1, 1):
+            np_, rk = steps[-1]
+            if np_ > 1:
+                np_ = max(1, np_ // 2)
+            else:
+                rk = max(1, rk // 2)
+            steps.append((np_, rk))
+        return steps
+    mn = max(1, int(max_new))
+    mn_min = max(1, mn // 4)
+    steps = [(nprobe, rerank_k, mn)]
+    while steps[-1] != (1, 1, mn_min):
+        np_, rk, m = steps[-1]
         if np_ > 1:
             np_ = max(1, np_ // 2)
-        else:
+        elif rk > 1:
             rk = max(1, rk // 2)
-        steps.append((np_, rk))
+        else:
+            m = max(mn_min, m // 2)
+        steps.append((np_, rk, m))
     return steps
 
 
@@ -102,17 +119,20 @@ class AutoscaleConfig:
     knob_headroom: float = 0.5         # p95 below this slo share → step up
     cooldown_steps: int = 2            # controller steps between knob moves
     replica_cooldown_steps: int = 1
-    ladder: List[Tuple[int, int]] = field(default_factory=list)
+    # [(nprobe, rerank_k)] or [(nprobe, rerank_k, max_new)] per quality step
+    ladder: List[Tuple[int, ...]] = field(default_factory=list)
 
     @classmethod
     def from_spec(cls, spec: AutoscaleSpec, base_nprobe: int = 0,
-                  base_rerank_k: int = 0) -> "AutoscaleConfig":
+                  base_rerank_k: int = 0, base_max_new: int = 0
+                  ) -> "AutoscaleConfig":
         """Map a declarative ``PipelineSpec.autoscale`` block onto the
         runtime config, deriving the default ladder from the pipeline's
         configured knobs when the spec leaves it empty."""
         ladder = [tuple(int(x) for x in step) for step in spec.ladder]
         if not ladder and (base_nprobe or base_rerank_k):
-            ladder = default_ladder(base_nprobe or 1, base_rerank_k or 1)
+            ladder = default_ladder(base_nprobe or 1, base_rerank_k or 1,
+                                    base_max_new)
         return cls(interval_s=spec.interval_ms / 1e3,
                    max_replicas=spec.max_replicas, slo_ms=spec.slo_ms,
                    max_batch=spec.max_batch, ladder=ladder)
@@ -134,7 +154,8 @@ class AutoscaleController:
             # derive the ladder without mutating the caller's config object
             cfg = dataclasses.replace(cfg, ladder=default_ladder(
                 executor.knobs.get("nprobe", 1) or 1,
-                executor.knobs.get("rerank_k", 1) or 1))
+                executor.knobs.get("rerank_k", 1) or 1,
+                executor.knobs.get("max_new", 0)))
         self.cfg = cfg
         self.executor = executor
         self.events: List[ScaleEvent] = []
@@ -308,13 +329,18 @@ class AutoscaleController:
             why = f"p95={snap.p95_ms:.0f}ms < {cfg.knob_headroom:.0%} slo"
         if new_level == self.level:
             return []
-        nprobe, rerank_k = cfg.ladder[new_level]
-        ev = ScaleEvent(snap.t_s, "knob", "", self.level, new_level,
-                        f"{why} -> nprobe={nprobe} rerank_k={rerank_k}")
+        step = cfg.ladder[new_level]
+        nprobe, rerank_k = step[0], step[1]
+        max_new = step[2] if len(step) > 2 else None
+        why += f" -> nprobe={nprobe} rerank_k={rerank_k}"
+        if max_new is not None:
+            why += f" max_new={max_new}"
+        ev = ScaleEvent(snap.t_s, "knob", "", self.level, new_level, why)
         self.level = new_level
         self._knob_wait = cfg.cooldown_steps + 1
         if self.executor is not None:
-            self.executor.apply_knobs(nprobe=nprobe, rerank_k=rerank_k)
+            self.executor.apply_knobs(nprobe=nprobe, rerank_k=rerank_k,
+                                      max_new=max_new)
         return [ev]
 
     # -- reporting ----------------------------------------------------------
@@ -336,12 +362,16 @@ class AutoscaleController:
         return [e.to_dict() for e in self.events]
 
     def knob_timeline(self) -> List[Dict[str, object]]:
-        """The quality-degradation timeline: (t, level, nprobe, rerank_k)."""
+        """The quality-degradation timeline: (t, level, nprobe, rerank_k
+        [, max_new])."""
         out = []
         for e in self.events:
             if e.kind != "knob":
                 continue
-            nprobe, rerank_k = self.cfg.ladder[e.new]
-            out.append({"t_s": e.t_s, "level": e.new,
-                        "nprobe": nprobe, "rerank_k": rerank_k})
+            step = self.cfg.ladder[e.new]
+            row = {"t_s": e.t_s, "level": e.new,
+                   "nprobe": step[0], "rerank_k": step[1]}
+            if len(step) > 2:
+                row["max_new"] = step[2]
+            out.append(row)
         return out

@@ -36,7 +36,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.interfaces import Chunk
 from repro.core.pipeline import RAGPipeline
-from repro.core.stages import RerankStage, RetrieveStage, traces_from_batch
+from repro.core.stages import (GenerateStage, RerankStage, RetrieveStage,
+                               traces_from_batch)
 from repro.serving.accounting import percentile
 from repro.serving.staged import (StagedResult, StageStats, _batch_from_items,
                                   _Item, _scatter_to_items)
@@ -101,6 +102,12 @@ class ElasticExecutor:
         self._stage_idx = {s.name: i for i, s in enumerate(self.stages)}
         self._target = [max(1, min(int(rep.get(s.name, 1)), max_replicas))
                         for s in self.stages]
+        # per-replica stage instances: each worker checks one out of the
+        # pool; stages over shared thread-safe components hand back ``self``
+        # from replica_copy, while the generation stage clones a warm engine
+        # per worker (own KV slot pool, shared params + thread-safe GenStats)
+        self._stage_pool: List[List] = [[s] for s in self.stages]
+        self._stage_instances: List[List] = [[s] for s in self.stages]
         self.stats = [StageStats(name=s.name, replicas=self._target[i])
                       for i, s in enumerate(self.stages)]
         self.queues: List[queue.Queue] = [
@@ -133,18 +140,23 @@ class ElasticExecutor:
     # -- knob plumbing ------------------------------------------------------
 
     def _read_knobs(self) -> Dict[str, int]:
-        nprobe, rerank_k = 0, 0
+        nprobe, rerank_k, max_new = 0, 0, 0
         for st in self.stages:
             if isinstance(st, RetrieveStage):
                 cfg = getattr(st.db, "cfg", None)
                 nprobe = int(getattr(cfg, "nprobe", 0) or 0)
             if isinstance(st, RerankStage):
                 rerank_k = int(st.rerank_k)
-        return {"nprobe": nprobe, "rerank_k": rerank_k}
+            if isinstance(st, GenerateStage):
+                max_new = int(getattr(st.llm, "max_new", 0) or 0)
+        return {"nprobe": nprobe, "rerank_k": rerank_k, "max_new": max_new}
 
     def apply_knobs(self, nprobe: Optional[int] = None,
-                    rerank_k: Optional[int] = None) -> None:
-        """Set retrieval quality knobs; takes effect on the next batch."""
+                    rerank_k: Optional[int] = None,
+                    max_new: Optional[int] = None) -> None:
+        """Set quality knobs; takes effect on the next batch.  ``max_new``
+        reaches every generation replica's engine (new admissions decode
+        shorter), joining ``nprobe``/``rerank_k`` on the quality ladder."""
         for st in self.stages:
             if nprobe is not None and isinstance(st, RetrieveStage) \
                     and hasattr(st.db, "set_nprobe"):
@@ -153,6 +165,17 @@ class ElasticExecutor:
             if rerank_k is not None and isinstance(st, RerankStage):
                 st.rerank_k = max(1, int(rerank_k))
                 self.knobs["rerank_k"] = max(1, int(rerank_k))
+        if max_new is not None:
+            si = self._stage_idx.get(GenerateStage.name)
+            if si is not None:
+                with self._lock:
+                    instances = list(self._stage_instances[si])
+                applied = 0
+                for st in instances:
+                    if hasattr(st.llm, "set_max_new"):
+                        applied = st.llm.set_max_new(max_new)
+                if applied:
+                    self.knobs["max_new"] = applied
 
     # -- scaling surface ----------------------------------------------------
 
@@ -163,6 +186,12 @@ class ElasticExecutor:
         """Grow/shrink a stage's pool; returns the clamped applied target."""
         si = self._stage_idx[stage_name]
         n = max(1, min(int(n), self.max_replicas))
+        with self._lock:
+            grow = n - self._target[si]
+        if grow > 0:
+            # build the new workers' stage instances (for generation: the
+            # replica engine + KV pool) before they enter the data path
+            self._warm_pool(si, grow)
         with self._lock:
             cur = self._target[si]
             if n > cur:
@@ -193,6 +222,7 @@ class ElasticExecutor:
         out["elastic_write_queue_depth"] = lambda: float(self._wq.qsize())
         out["elastic_nprobe"] = lambda: float(self.knobs["nprobe"])
         out["elastic_rerank_k"] = lambda: float(self.knobs["rerank_k"])
+        out["elastic_max_new"] = lambda: float(self.knobs.get("max_new", 0))
         return out
 
     def snapshot(self) -> List[Dict[str, float]]:
@@ -218,6 +248,11 @@ class ElasticExecutor:
         if self._started:
             return self
         self._started = True
+        # warm-pool init: build every initial replica's stage instance (for
+        # generation: engine + KV slot pool) *before* traffic, so scale-out
+        # at admission time never pays construction cost on the data path
+        for si in range(len(self.stages)):
+            self._warm_pool(si, self._target[si])
         with self._lock:
             for si in range(len(self.stages)):
                 for _ in range(self._target[si]):
@@ -236,6 +271,34 @@ class ElasticExecutor:
             name=f"ragperf-elastic-{self.stages[si].name}-{self._active[si]}")
         t.start()
         self._threads.append(t)
+
+    # -- per-replica stage instances ----------------------------------------
+
+    def _warm_pool(self, si: int, n: int) -> None:
+        """Grow stage ``si``'s instance pool to ``n`` available copies."""
+        while True:
+            with self._lock:
+                if len(self._stage_pool[si]) >= n:
+                    return
+            inst = self.stages[si].replica_copy()   # may allocate a KV pool
+            with self._lock:
+                self._stage_pool[si].append(inst)
+                if inst is not self.stages[si]:
+                    self._stage_instances[si].append(inst)
+
+    def _checkout_stage(self, si: int):
+        with self._lock:
+            if self._stage_pool[si]:
+                return self._stage_pool[si].pop()
+        inst = self.stages[si].replica_copy()
+        with self._lock:
+            if inst is not self.stages[si]:
+                self._stage_instances[si].append(inst)
+        return inst
+
+    def _return_stage(self, si: int, inst) -> None:
+        with self._lock:
+            self._stage_pool[si].append(inst)
 
     def close_intake(self) -> None:
         """No further submissions; pools drain then shut down in order."""
@@ -327,11 +390,14 @@ class ElasticExecutor:
             self._closed[si + 1].set()
 
     def _worker(self, si: int) -> None:
-        stage, stats = self.stages[si], self.stats[si]
+        # each worker runs its own stage instance (per-replica generation
+        # engines); returned to the pool on any exit path for reuse
+        stage, stats = self._checkout_stage(si), self.stats[si]
         in_q, out_q = self.queues[si], self.queues[si + 1]
         try:
             while not self._abort.is_set():
                 if self._take_shrink(si):
+                    self._return_stage(si, stage)
                     return            # retired by scale-down, not stream end
                 stats.observe_depth(in_q.qsize())
                 t_wait = time.perf_counter()
@@ -363,6 +429,7 @@ class ElasticExecutor:
                 self._run_batch(si, stage, stats, items, out_q)
         except BaseException as e:                   # noqa: BLE001
             self._fail(e)
+        self._return_stage(si, stage)
         self._retire(si)
 
     def _run_batch(self, si: int, stage, stats: StageStats,

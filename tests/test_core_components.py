@@ -148,7 +148,10 @@ def test_model_llm_generates_and_records_stats():
     assert len(out) == 3
     assert all(o for o in out)
     s = llm.stats.summary()
-    assert s["ttft_mean_s"] > 0 and s["tokens_out"] == 12
+    # stats count real requests only: the jit-padding row in the second
+    # batch (3 prompts, batch_size=2) contributes no tokens and no samples
+    assert s["ttft_mean_s"] > 0 and s["tokens_out"] == 9
+    assert s["n_requests"] == 3 and len(llm.stats.ttft_s) == 3
 
 
 def test_build_prompt_contains_context_and_question():

@@ -112,7 +112,8 @@ def test_apply_knobs_changes_db_and_rerank(rig):
     ex = ElasticExecutor(pipe, default_batch=4)
     base = dict(ex.knobs)
     ex.apply_knobs(nprobe=2, rerank_k=1)
-    assert ex.knobs == {"nprobe": 2, "rerank_k": 1}
+    # extractive llm exposes no max_new knob -> stays at its read value (0)
+    assert ex.knobs == {"nprobe": 2, "rerank_k": 1, "max_new": 0}
     assert pipe.db.cfg.nprobe == 2
     assert pipe.stages[2].rerank_k == 1
     ex.apply_knobs(nprobe=base["nprobe"] or 8, rerank_k=base["rerank_k"])

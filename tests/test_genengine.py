@@ -1,0 +1,223 @@
+"""Continuous-batching generation engine: equivalence, per-request metrics,
+concurrent GenStats, GenSpec round-trip, replica cloning."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.generator import GenStats, ModelLLM
+from repro.core.registry import build
+from repro.core.spec import GenSpec, PipelineSpec, StageSpec
+from repro.serving.genengine import (EngineLLM, GenEngine,
+                                     engine_from_model_llm)
+
+CFG = configs.get_smoke("llama3_8b")
+
+PROMPTS = [
+    "what is the capital of entity seven",
+    "short",
+    "a much longer question containing many distinct content words about "
+    "systems benchmarks retrieval generation latency throughput quality "
+    "alpha beta gamma delta epsilon zeta",
+    "tell me about alpha beta gamma delta",
+    "x",
+    "medium length question about entity twelve and entity nine",
+]
+
+
+@pytest.fixture(scope="module")
+def lockstep_llm():
+    return ModelLLM(CFG, max_prompt=48, max_new=5, batch_size=2, seed=0)
+
+
+@pytest.fixture(scope="module")
+def lockstep_ref(lockstep_llm):
+    return lockstep_llm.generate(PROMPTS, [[] for _ in PROMPTS])
+
+
+def test_engine_output_identical_to_lockstep(lockstep_llm, lockstep_ref):
+    """Same admission order => token-identical outputs, across slot counts,
+    chunk sizes, fused prefill budgets and admission policies."""
+    for slots, chunk, budget, adm in [(2, 8, 1, "fcfs"), (3, 16, 2, "fcfs"),
+                                      (1, 8, 1, "fcfs"), (2, 8, 2, "sjf")]:
+        eng = engine_from_model_llm(lockstep_llm, slots=slots,
+                                    chunk_tokens=chunk,
+                                    prefill_chunks_per_step=budget,
+                                    admission=adm)
+        out = EngineLLM(engine=eng).generate(PROMPTS, [[] for _ in PROMPTS])
+        assert out == lockstep_ref, (slots, chunk, budget, adm)
+
+
+def test_lockstep_outputs_are_batch_padding_invariant():
+    """Per-row decode positions: a request's output no longer depends on the
+    jit-padding rows or co-batched requests."""
+    llm = ModelLLM(CFG, max_prompt=48, max_new=4, batch_size=4, seed=0)
+    together = llm.generate(PROMPTS[:3], [[] for _ in range(3)])
+    alone = [llm.generate([p], [[]])[0] for p in PROMPTS[:3]]
+    assert together == alone
+
+
+def test_padding_rows_excluded_from_stats():
+    llm = ModelLLM(CFG, max_prompt=32, max_new=3, batch_size=4, seed=0)
+    llm.generate(PROMPTS[:5], [[] for _ in range(5)])   # batches of 4 + 1(+3 pad)
+    s = llm.stats.summary()
+    assert s["tokens_out"] == 5 * 3
+    assert s["n_requests"] == 5
+    assert len(llm.stats.ttft_s) == 5 and len(llm.stats.tpot_s) == 5
+
+
+def test_engine_per_request_ttft_monotone_under_mixed_lengths():
+    """FCFS + one slot: first tokens are emitted in admission order, so
+    recorded first-token times are strictly increasing even when a short
+    prompt queues behind a long one."""
+    eng = GenEngine(CFG, slots=1, chunk_tokens=8, max_prompt=48, max_new=3)
+    t0 = 0.0
+    rids = [eng.submit(p, t_arrive=t0) for p in PROMPTS]
+    while eng.busy():
+        eng.step()
+    recs = [eng.records[r] for r in rids]
+    t_first = [r.t_first for r in recs]
+    assert all(b > a for a, b in zip(t_first, t_first[1:]))
+    # TTFT is anchored at the submitted arrival and must be positive and
+    # non-decreasing for a single-slot FCFS engine (later admissions wait
+    # at least as long as earlier ones plus their own prefill)
+    ttfts = [r.ttft_s for r in recs]
+    assert all(t > 0 for t in ttfts)
+    assert eng.stats.n_requests == len(PROMPTS)
+    assert eng.stats.tokens_out == 3 * len(PROMPTS)
+
+
+def test_engine_admission_sjf_prefers_short_prompts():
+    eng = GenEngine(CFG, slots=1, chunk_tokens=8, max_prompt=48, max_new=2,
+                    admission="sjf")
+    long_rid = eng.submit(PROMPTS[2], t_arrive=0.0)
+    short_rid = eng.submit("x", t_arrive=0.0)
+    while eng.busy():
+        eng.step()
+    assert (eng.records[short_rid].t_first
+            < eng.records[long_rid].t_first)
+
+
+def test_genstats_concurrent_recording_loses_no_updates():
+    """Two replica engines sharing one GenStats must not lose samples."""
+    stats = GenStats()
+    n, workers = 2000, 4
+
+    def pound():
+        for i in range(n):
+            stats.record(0.001 * i, 0.0001 * i, 3)
+
+    threads = [threading.Thread(target=pound) for _ in range(workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert stats.n_requests == n * workers
+    assert len(stats.ttft_s) == n * workers
+    assert len(stats.tpot_s) == n * workers
+    assert stats.tokens_out == 3 * n * workers
+
+
+def test_genstats_merge():
+    a, b = GenStats(), GenStats()
+    a.record(0.1, 0.01, 4)
+    b.record(0.2, 0.02, 8)
+    a.merge(b)
+    assert a.n_requests == 2 and a.tokens_out == 12
+    assert a.summary()["ttft_mean_s"] == pytest.approx(0.15)
+
+
+def test_genspec_json_roundtrip():
+    spec = PipelineSpec(
+        llm=StageSpec("model", {"arch": "llama3_8b", "smoke": True}),
+        gen=GenSpec(enabled=True, slots=6, chunk_tokens=16,
+                    prefill_chunks_per_step=2, admission="sjf"))
+    text = spec.to_json()
+    back = PipelineSpec.from_json(text)
+    assert back == spec
+    assert back.gen.slots == 6 and back.gen.admission == "sjf"
+    # unknown keys rejected
+    d = json.loads(text)
+    d["gen"]["bogus"] = 1
+    with pytest.raises(ValueError):
+        PipelineSpec.from_dict(d)
+    # defaults stay disabled and round-trip too
+    assert PipelineSpec.from_json(PipelineSpec().to_json()).gen \
+        == GenSpec()
+
+
+def test_gen_block_builds_engine_backed_pipeline():
+    spec = PipelineSpec(
+        llm=StageSpec("model", {"arch": "llama3_8b", "smoke": True,
+                                "max_prompt": 48, "max_new": 3}),
+        gen=GenSpec(enabled=True, slots=2, chunk_tokens=8))
+    pipe = build(spec)
+    assert isinstance(pipe.llm, EngineLLM)
+    assert pipe.llm.engine.slots == 2
+    # disabled gen block leaves the lock-step generator in place
+    pipe2 = build(spec.replace(gen=GenSpec(enabled=False)))
+    assert isinstance(pipe2.llm, ModelLLM)
+
+
+def test_engine_llm_clone_shares_stats_not_slots():
+    llm = EngineLLM(CFG, slots=2, chunk_tokens=8, max_prompt=32, max_new=2)
+    twin = llm.clone()
+    assert twin.engine is not llm.engine
+    assert twin.engine.core is llm.engine.core        # shared params/jit
+    assert twin.stats is llm.stats                    # shared (locked) stats
+    out_a = llm.generate(PROMPTS[:2], [[], []])
+    out_b = twin.generate(PROMPTS[:2], [[], []])
+    assert out_a == out_b
+    assert llm.stats.n_requests == 4
+
+
+def test_generate_stage_replica_copy_clones_engine():
+    from repro.core.stages import GenerateStage
+    llm = EngineLLM(CFG, slots=2, chunk_tokens=8, max_prompt=32, max_new=2)
+    stage = GenerateStage(llm, batch_size=3)
+    twin = stage.replica_copy()
+    assert twin is not stage
+    assert twin.llm.engine is not stage.llm.engine
+    assert twin.llm.stats is stage.llm.stats
+    assert twin.batch_size == stage.batch_size
+
+
+def test_engine_set_max_new_clamped_and_applied():
+    eng = GenEngine(CFG, slots=1, chunk_tokens=8, max_prompt=32, max_new=6)
+    assert eng.set_max_new(3) == 3
+    rid = eng.submit("a question about entities", t_arrive=0.0)
+    while eng.busy():
+        eng.step()
+    assert len(eng.records[rid].out) == 3
+    assert eng.set_max_new(99) == 6       # clamped to the cache ceiling
+
+
+def test_clone_of_ladder_degraded_engine_keeps_full_ceiling():
+    """A replica created while the quality ladder is stepped down must still
+    be able to step back up to the configured decode length."""
+    eng = GenEngine(CFG, slots=1, chunk_tokens=8, max_prompt=32, max_new=8)
+    eng.set_max_new(2)                    # ladder under SLO pressure
+    twin = eng.clone()
+    assert twin.max_new == 2              # inherits the current knob...
+    assert twin.set_max_new(8) == 8       # ...but not a shrunken ceiling
+    assert twin.max_len == eng.max_len
+
+
+def test_run_releases_per_request_records():
+    eng = GenEngine(CFG, slots=2, chunk_tokens=8, max_prompt=32, max_new=2)
+    eng.run(PROMPTS[:4])
+    assert eng.records == {}              # batch mode holds no state behind
+
+
+def test_default_ladder_gains_max_new_column():
+    from repro.serving.autoscale import default_ladder
+    steps = default_ladder(8, 4, max_new=16)
+    assert steps[0] == (8, 4, 16)
+    assert steps[-1] == (1, 1, 4)
+    assert all(len(s) == 3 for s in steps)
+    # knob order: nprobe first, then rerank_k, then max_new
+    assert steps[1][0] == 4 and steps[1][2] == 16
+    # 2-column ladders unchanged for pipelines without the knob
+    assert default_ladder(4, 2) == [(4, 2), (2, 2), (1, 2), (1, 1)]
