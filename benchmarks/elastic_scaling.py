@@ -27,31 +27,36 @@ elastic smoke):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 from typing import Dict, List, Optional
 
-from benchmarks.common import build_pipeline, emit, make_corpus
-from repro.serving.arrival import ArrivalConfig
+from benchmarks.common import make_corpus
+from repro.core.registry import build
+from repro.scenarios.registry import get_scenario
 from repro.serving.autoscale import (AutoscaleConfig, AutoscaleController,
                                      default_ladder)
 from repro.serving.batcher import BatchPolicy
 from repro.serving.elastic import ElasticExecutor
 from repro.serving.harness import ServingConfig, ServingHarness
-from repro.workload.generator import WorkloadConfig
 from repro.workload.runner import gold_chunks_for
 
-SLO_MS = 120.0
-BATCH = 8
-NPROBE = 8
-MAX_REPLICAS = 4
+# the workload under test is the registered burst-tolerance scenario: this
+# bench inherits its SLO, burst shape, pipeline knobs and replica cap, so
+# the ad-hoc flag soup lives in exactly one place (the scenario catalog)
+SCENARIO = get_scenario("burst_tolerance")
+SLO_MS = SCENARIO.slo_ms
+BATCH = SCENARIO.autoscale.max_batch
+NPROBE = int(SCENARIO.pipeline_spec().vectordb.options["nprobe"])
+MAX_REPLICAS = SCENARIO.autoscale.max_replicas
 
 
 def _fresh_pipeline(n_docs: int, seed: int):
     corpus = make_corpus(n_docs, seed=seed)
-    # capacity sizes the IVF bucket gather ([nq, nprobe, cap_b, dim]); keep
-    # it proportional to the corpus so per-search cost stays serving-scale
-    pipe = build_pipeline(corpus, index_type="ivf", nlist=16, nprobe=NPROBE,
-                          capacity=2048, retrieve_k=8, rerank_k=3)
+    # the scenario's pipeline spec: serving-scale IVF (capacity sizes the
+    # bucket gather so per-search cost stays proportional to the corpus)
+    pipe = build(SCENARIO.pipeline_spec())
+    pipe.index_documents(corpus.all_documents())
     return pipe, corpus
 
 
@@ -90,12 +95,12 @@ def _serve(n_docs: int, n_requests: int, target_qps: float, seed: int,
             AutoscaleConfig(interval_s=0.05, max_replicas=max_replicas,
                             slo_ms=SLO_MS, max_batch=BATCH, ladder=ladder),
             executor=executor)
-    wcfg = WorkloadConfig(query_frac=1.0, update_frac=0.0,
-                          n_requests=n_requests, seed=seed)
+    wcfg = SCENARIO.mix.config(n_requests=n_requests, seed=seed)
+    acfg = dataclasses.replace(
+        SCENARIO.arrival.config(n_requests=n_requests, seed=seed),
+        target_qps=target_qps)
     scfg = ServingConfig(
-        arrival=ArrivalConfig(mode="open", process="bursty",
-                              target_qps=target_qps, n_requests=n_requests,
-                              seed=seed),
+        arrival=acfg,
         policy=BatchPolicy(max_batch=BATCH, max_wait_s=0.005),
         slo_ms=SLO_MS, evaluate=False)
     harness = ServingHarness(pipe, corpus, wcfg, scfg, executor=executor)
@@ -158,7 +163,7 @@ def _equivalence_check(n_docs: int, seed: int) -> bool:
 def sweep(scale: float = 1.0, seed: int = 0) -> Dict[str, object]:
     n_docs = max(32, int(48 * scale))
     n_requests = max(80, int(160 * scale))
-    target_qps = 80.0
+    target_qps = SCENARIO.arrival.target_qps
     static = _serve(n_docs, n_requests, target_qps, seed, mode="static")
     elastic = _serve(n_docs, n_requests, target_qps, seed, mode="elastic")
     # knob-only mode runs at 2x offered load: one replica per stage cannot

@@ -11,8 +11,8 @@ import traceback
 from benchmarks import (accuracy_eval, elastic_scaling, gen_engine,
                         index_schemes, indexing_breakdown, monitor_overhead,
                         query_breakdown, resource_limits,
-                        resource_utilization, sensitivity, serving,
-                        stage_pipeline, update_workload)
+                        resource_utilization, scenarios, sensitivity,
+                        serving, stage_pipeline, update_workload)
 from benchmarks.common import emit
 
 MODULES = {
@@ -29,6 +29,7 @@ MODULES = {
     "stage_pipeline": stage_pipeline,         # lock-step vs pipelined stages
     "elastic_scaling": elastic_scaling,       # static vs elastic + knob ladder
     "gen_engine": gen_engine,                 # lock-step vs continuous batching
+    "scenarios": scenarios,                   # named scenario suite (sim mode)
 }
 
 

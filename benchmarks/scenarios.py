@@ -1,0 +1,149 @@
+"""Scenario suite: every registered workload scenario as a deterministic,
+quality-priced benchmark — and the golden-trace regression gate.
+
+Each named scenario (``repro.scenarios.registry``: steady, burst_tolerance,
+update_storm, mixed_interference, diurnal_ramp) runs through the
+wall-clock-free simulator (seeded arrivals + seeded workload + the real
+``AutoscaleController`` + a real-pipeline quality replay), reporting plain
+SLO goodput next to **quality-aware goodput** so knob-ladder savings are
+honestly priced against their recall/answer cost.
+
+Because the sim mode is bit-deterministic, each scenario's
+(scaling-event stream, knob timeline, quality-goodput) is pinned by a golden
+trace in ``tests/golden/``:
+
+* ``--check``  — replay every golden scenario and fail on any drift (the
+  tier-1 gate; ``--only NAME`` narrows it);
+* ``--regen``  — re-record the golden traces (``scripts/regen_golden.sh``
+  wraps this with a diff-review reminder).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.scenarios import (GOLDEN_DIR, ScenarioRunner, diff_golden,
+                             get_scenario, golden_dict, golden_path,
+                             golden_variant, scenario_names)
+from repro.scenarios.registry import GOLDEN_SCALE
+
+
+def _simulate(name: str, scale: float = 1.0):
+    spec = get_scenario(name) if scale == 1.0 else \
+        get_scenario(name).scaled(scale)
+    return spec, ScenarioRunner(spec).simulate()
+
+
+def sweep(scale: float = 1.0) -> Dict[str, Dict]:
+    return {name: _simulate(name, scale)[1].to_dict()
+            for name in scenario_names()}
+
+
+def run(scale: float = 1.0) -> List[Dict]:
+    """benchmarks.run entry point: one row per scenario."""
+    rows = []
+    for name, doc in sweep(scale).items():
+        s = doc["summary"]
+        rows.append({
+            "bench": f"scenarios/{name}",
+            "n_requests": doc["n_requests"],
+            "p95_latency_ms": s.get("p95_latency_ms", 0.0),
+            "slo_attainment": s.get("slo_attainment", 0.0),
+            "goodput_qps": s.get("goodput_qps", 0.0),
+            "quality_goodput_qps": s.get("quality_goodput_qps", 0.0),
+            "quality_weight": s.get("quality_weight_mean", 1.0),
+            "n_scaling_events": len(doc["scaling_events"]),
+            "n_knob_moves": len(doc["knob_timeline"]),
+            "deterministic": float(doc["deterministic_replay"]),
+        })
+    return rows
+
+
+def regen(only: str = "") -> List[str]:
+    """Re-record golden traces at the golden size; returns written paths."""
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    written = []
+    for name in scenario_names():
+        if only and name != only:
+            continue
+        spec = golden_variant(name)
+        report = ScenarioRunner(spec).simulate()
+        path = golden_path(name)
+        with open(path, "w") as f:
+            json.dump(golden_dict(report, spec), f, indent=2, sort_keys=True)
+            f.write("\n")
+        written.append(path)
+    return written
+
+
+def check(only: str = "") -> List[str]:
+    """Replay each golden trace; returns human-readable failures."""
+    failures: List[str] = []
+    names = [only] if only else scenario_names()
+    for name in names:
+        path = golden_path(name)
+        if not os.path.exists(path):
+            failures.append(f"{name}: no golden trace at {path} "
+                            f"(run scripts/regen_golden.sh)")
+            continue
+        with open(path) as f:
+            expected = json.load(f)
+        spec = golden_variant(name)
+        report = ScenarioRunner(spec).simulate()
+        if not report.deterministic_replay:
+            failures.append(f"{name}: controller replay diverged from its "
+                            f"own live event stream")
+        for d in diff_golden(expected, golden_dict(report, spec)):
+            failures.append(f"{name}: {d}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="golden-size scenarios; JSON to stdout")
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--only", default="",
+                    help="restrict --check/--regen/sweep to one scenario")
+    ap.add_argument("--check", action="store_true",
+                    help="replay golden traces, exit nonzero on drift")
+    ap.add_argument("--regen", action="store_true",
+                    help="re-record golden traces (review the diff!)")
+    ap.add_argument("--out", default="", help="optional JSON output path")
+    args = ap.parse_args(argv)
+    if args.only and args.only not in scenario_names():
+        ap.error(f"unknown scenario {args.only!r}; "
+                 f"registered: {', '.join(scenario_names())}")
+    if args.regen:
+        for path in regen(args.only):
+            print(f"wrote {path}")
+        print("golden traces re-recorded — review `git diff tests/golden/` "
+              "before committing")
+        return 0
+    if args.check:
+        failures = check(args.only)
+        for f in failures:
+            print(f"CHECK FAILED: {f}")
+        if not failures:
+            names = [args.only] if args.only else scenario_names()
+            print(f"CHECK OK: {len(names)} golden scenario trace(s) "
+                  f"reproduced bit-for-bit")
+        return 1 if failures else 0
+    scale = GOLDEN_SCALE if args.smoke else args.scale
+    if args.only:
+        spec, report = _simulate(args.only, scale)
+        doc: Dict[str, object] = {args.only: report.to_dict()}
+    else:
+        doc = sweep(scale)
+    text = json.dumps(doc, indent=2, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

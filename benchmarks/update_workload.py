@@ -1,13 +1,22 @@
 """Paper Fig. 9 / §5.5: latency + accuracy under continuous updates, three
 configurations: (1) no temp flat index (stale), (2) hybrid + uniform,
-(3) hybrid + zipfian."""
+(3) hybrid + zipfian.
+
+The op mix comes from the registered ``update_storm`` scenario
+(``repro.scenarios``) — the bench varies only the index policy and the
+access distribution on top of that canonical mutation-heavy stream.
+"""
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
 from benchmarks.common import build_pipeline, emit, make_corpus
-from repro.workload.generator import WorkloadConfig
+from repro.scenarios.registry import get_scenario
 from repro.workload.runner import run_workload
+
+SCENARIO = get_scenario("update_storm")
 
 
 def run(scale: float = 1.0):
@@ -24,9 +33,9 @@ def run(scale: float = 1.0):
     for name, over, dist in configs_:
         corpus = make_corpus(n_docs, seed=1)
         pipe = build_pipeline(corpus, **over)
-        res = run_workload(pipe, corpus, WorkloadConfig(
-            query_frac=0.5, update_frac=0.5, n_requests=n_req,
-            distribution=dist, seed=2), query_batch=4)
+        wcfg = dataclasses.replace(
+            SCENARIO.mix.config(n_requests=n_req, seed=2), distribution=dist)
+        res = run_workload(pipe, corpus, wcfg, query_batch=4)
         lat = res.latencies.get("query", [0.0])
         rows.append({
             "bench": f"update_workload/{name}",

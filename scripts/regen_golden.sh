@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Re-record the scenario golden traces in tests/golden/.
+#
+# Run this ONLY when a change is *supposed* to alter scenario behavior
+# (controller policy, cost model, scenario catalog, quality scoring).  The
+# golden traces are the regression contract tier-1 enforces — a regen that
+# "fixes CI" without an understood behavior change is hiding a regression.
+#
+# Usage: scripts/regen_golden.sh [scenario_name]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m benchmarks.scenarios --regen ${1:+--only "$1"}
+
+echo
+echo "Golden traces updated. REVIEW THE DIFF before committing:"
+echo "    git diff --stat tests/golden/"
+echo "Every changed number should be explainable by your change."
+git --no-pager diff --stat tests/golden/ || true

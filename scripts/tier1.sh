@@ -25,4 +25,10 @@ echo "== tier-1: continuous-batching gen engine smoke =="
 # TTFT p95 win under the bursty mixed-prompt-length workload
 python -m benchmarks.gen_engine --smoke --check > /dev/null
 
+echo "== tier-1: scenario golden-trace replay (deterministic sim) =="
+# --check replays every registered scenario through the wall-clock-free
+# simulator and asserts the (scaling events, knob timeline, quality-aware
+# goodput) trace matches tests/golden/ bit-for-bit
+python -m benchmarks.scenarios --check > /dev/null
+
 echo "tier-1 OK"

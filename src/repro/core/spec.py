@@ -231,6 +231,27 @@ class PipelineSpec:
     def replace(self, **kw) -> "PipelineSpec":
         return dataclasses.replace(self, **kw)
 
+    def merged(self, overrides: Dict[str, Any]) -> "PipelineSpec":
+        """Apply a *partial* spec dict on top of this spec (deep merge).
+
+        Component-slot entries merge key-wise — their ``options`` dicts merge
+        rather than replace, so an override like
+        ``{"vectordb": {"options": {"nprobe": 4}}}`` retunes one knob without
+        restating the component.  Scenario specs use this to carry pipeline
+        deltas instead of full pipeline copies.
+        """
+        base = self.to_dict()
+        for key, val in overrides.items():
+            if key in COMPONENT_KINDS and isinstance(val, dict):
+                slot = dict(base[key])
+                opts = {**slot.get("options", {}), **val.get("options", {})}
+                slot.update(val)
+                slot["options"] = opts
+                base[key] = slot
+            else:
+                base[key] = val
+        return PipelineSpec.from_dict(base)
+
     # -- legacy mapping ------------------------------------------------------
 
     @classmethod

@@ -21,6 +21,12 @@ N+1 runs batch i) and prints per-stage busy/idle/occupancy.
 and walks the ``nprobe``/``rerank_k`` quality ladder under SLO pressure.
 ``--json-out`` writes the machine-readable run document (summary, per-stage
 occupancy table, scaling events, knob timeline) for benchmarks and CI.
+
+``--scenario NAME`` runs a registered benchmark scenario
+(``repro.scenarios``) instead of assembling one from flags: the scenario
+fully defines the arrival process, op mix, SLO, autoscale block and seed.
+``--scenario-sim`` switches to the wall-clock-free deterministic replay
+(the golden-trace mode); ``--scenario list`` prints the catalog.
 """
 from __future__ import annotations
 
@@ -57,6 +63,44 @@ def spec_from_args(args) -> PipelineSpec:
         # the serving driver always ran its generator with a short prompt
         spec.llm.options["max_prompt"] = 128
     return spec
+
+
+def run_scenario(args) -> None:
+    """Drive one registered scenario (live or deterministic-sim mode) and
+    print/emit the unified scenario report."""
+    from repro.scenarios import ScenarioRunner, get_scenario, scenario_names
+    if args.scenario == "list":
+        for name in scenario_names():
+            print(name, "-", get_scenario(name).description)
+        return
+    spec = get_scenario(args.scenario)
+    if args.scenario_scale != 1.0:
+        spec = spec.scaled(args.scenario_scale)
+    if args.seed is not None:
+        spec = spec.replace(seed=args.seed)
+    runner = ScenarioRunner(spec)
+    report = runner.simulate() if args.scenario_sim else runner.serve()
+    s = report.summary
+    print(f"scenario {spec.name} ({report.mode}): "
+          f"{int(s.get('n_queries', 0))} queries / "
+          f"{int(s.get('n_mutations', 0))} mutations, seed {spec.seed}")
+    print(f"latency p50/p95/p99 (ms): {s.get('p50_latency_ms', 0.0):.1f} / "
+          f"{s.get('p95_latency_ms', 0.0):.1f} / "
+          f"{s.get('p99_latency_ms', 0.0):.1f}")
+    print(f"SLO {spec.slo_ms:.0f} ms: attainment "
+          f"{s.get('slo_attainment', 0.0):.3f}, goodput "
+          f"{s.get('goodput_qps', 0.0):.2f} QPS, quality-aware goodput "
+          f"{s.get('quality_goodput_qps', 0.0):.2f} QPS "
+          f"(quality weight {s.get('quality_weight_mean', 1.0):.3f})")
+    print(f"scaling events: {len(report.scaling_events)}, knob moves: "
+          f"{len(report.knob_timeline)}, deterministic replay: "
+          f"{report.deterministic_replay}")
+    print("quality:", {k: round(v, 3) for k, v in report.quality.items()})
+    if args.json_out:
+        os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
+        with open(args.json_out, "w") as f:
+            json.dump(report.to_dict(), f, indent=2, sort_keys=True)
+        print(f"wrote {args.json_out}")
 
 
 def main(argv=None):
@@ -101,7 +145,11 @@ def main(argv=None):
     ap.add_argument("--concurrency", type=int, default=4,
                     help="in-flight cap for --mode closed")
     ap.add_argument("--arrival", default="poisson",
-                    choices=["poisson", "bursty", "uniform"])
+                    choices=["poisson", "bursty", "uniform", "diurnal"])
+    ap.add_argument("--ramp-period-s", type=float, default=8.0,
+                    help="diurnal arrivals: one trough→peak→trough period")
+    ap.add_argument("--ramp-amplitude", type=float, default=0.8,
+                    help="diurnal arrivals: rate swing around the mean")
     ap.add_argument("--batch-timeout-ms", type=float, default=20.0,
                     help="continuous-batching coalesce deadline")
     ap.add_argument("--priority", default="fifo",
@@ -117,8 +165,24 @@ def main(argv=None):
     ap.add_argument("--json-out", default="",
                     help="write the run document (summary, per-stage "
                          "occupancy table, scaling events) as JSON")
-    ap.add_argument("--seed", type=int, default=0)
+    # scenario suite (repro.scenarios): named, seeded workload scenarios
+    ap.add_argument("--scenario", default="",
+                    help="run a registered benchmark scenario by name "
+                         "('list' prints the catalog); overrides the "
+                         "flag-assembled workload")
+    ap.add_argument("--scenario-sim", action="store_true",
+                    help="run the scenario as the wall-clock-free "
+                         "deterministic replay instead of live serving")
+    ap.add_argument("--scenario-scale", type=float, default=1.0,
+                    help="corpus/stream size multiplier for --scenario")
+    # default None so run_scenario can tell "--seed 0" from "not given"
+    # (a scenario's own seed must only be overridden explicitly)
+    ap.add_argument("--seed", type=int, default=None)
     args = ap.parse_args(argv)
+    if args.scenario:
+        return run_scenario(args)
+    if args.seed is None:
+        args.seed = 0
     if args.target_qps <= 0:
         ap.error("--target-qps must be > 0")
     if args.concurrency < 1:
@@ -174,7 +238,9 @@ def main(argv=None):
             arrival=ArrivalConfig(
                 mode=args.mode, process=args.arrival,
                 target_qps=args.target_qps, n_requests=args.requests,
-                concurrency=args.concurrency, seed=args.seed),
+                concurrency=args.concurrency,
+                ramp_period_s=args.ramp_period_s,
+                ramp_amplitude=args.ramp_amplitude, seed=args.seed),
             policy=BatchPolicy(max_batch=args.batch,
                                max_wait_s=args.batch_timeout_ms / 1e3,
                                priority=args.priority),

@@ -1,2 +1,3 @@
 from repro.metrics.quality import (  # noqa: F401
-    context_recall, query_accuracy, factual_consistency, evaluate_traces)
+    context_recall, query_accuracy, factual_consistency, evaluate_traces,
+    trace_quality, mean_quality_weight)

@@ -79,6 +79,31 @@ def factual_consistency(traces: Sequence[StageTrace],
     return total / len(scored)
 
 
+def trace_quality(trace: StageTrace) -> float:
+    """Per-request quality weight in [0, 1] for quality-aware goodput.
+
+    The mean of the two axes the serving knob ladder degrades: whether the
+    gold chunk survived into the (possibly ``nprobe``/``rerank_k``-reduced)
+    context, and token-F1 of the (possibly ``max_new``-shortened) answer
+    against ground truth.  A request with no gradable ground truth weighs 1
+    (nothing to price), so the weight only ever *discounts* goodput.
+    """
+    parts = []
+    if trace.gold_chunk_ids:
+        ids = set(trace.reranked_ids or trace.retrieved_ids)
+        parts.append(1.0 if ids & set(trace.gold_chunk_ids) else 0.0)
+    if trace.ground_truth:
+        parts.append(_f1(trace.answer, trace.ground_truth))
+    return sum(parts) / len(parts) if parts else 1.0
+
+
+def mean_quality_weight(traces: Sequence[StageTrace]) -> float:
+    """Mean per-request quality weight (1.0 for an empty trace list)."""
+    if not traces:
+        return 1.0
+    return sum(trace_quality(t) for t in traces) / len(traces)
+
+
 def evaluate_traces(traces: Sequence[StageTrace], db=None) -> Dict[str, float]:
     out: Dict[str, float] = {
         "context_recall_retrieved": context_recall(traces, "retrieved"),

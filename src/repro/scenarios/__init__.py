@@ -1,0 +1,17 @@
+"""First-class benchmark scenarios: declarative specs, a named catalog, a
+wall-clock-free deterministic simulator, and one unified report schema with
+quality-aware SLO goodput (``repro.scenarios.runner``)."""
+from repro.scenarios.registry import (get_scenario, golden_variant,
+                                      register_scenario, scenario_names)
+from repro.scenarios.runner import (GOLDEN_DIR, ScenarioReport,
+                                    ScenarioRunner, diff_golden, golden_dict,
+                                    golden_path)
+from repro.scenarios.sim import CostModel, ScenarioSim
+from repro.scenarios.spec import ArrivalSpec, MixSpec, ScenarioSpec
+
+__all__ = [
+    "ArrivalSpec", "CostModel", "GOLDEN_DIR", "MixSpec", "ScenarioReport",
+    "ScenarioRunner", "ScenarioSim", "ScenarioSpec", "diff_golden",
+    "get_scenario", "golden_dict", "golden_path", "golden_variant",
+    "register_scenario", "scenario_names",
+]

@@ -1,0 +1,103 @@
+"""Named scenario catalog (ROADMAP: burst/update-storm as first-class
+benchmark modules).
+
+Every registered scenario is a fully-declarative ``ScenarioSpec``:
+reproducible from its seed, runnable live (``ScenarioRunner.serve``) or as a
+wall-clock-free deterministic replay (``ScenarioRunner.simulate``), and
+pinned by a golden trace in ``tests/golden/`` at the ``golden_variant``
+size.  ``get_scenario`` returns an isolated copy — callers may mutate their
+spec freely without corrupting the catalog.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.spec import AutoscaleSpec
+
+from repro.scenarios.spec import ArrivalSpec, MixSpec, ScenarioSpec
+
+# the size golden traces are recorded (and replayed in tier-1) at
+GOLDEN_SCALE = 0.5
+
+_REGISTRY: Dict[str, ScenarioSpec] = {}
+
+
+def register_scenario(spec: ScenarioSpec) -> ScenarioSpec:
+    assert spec.name not in _REGISTRY, f"duplicate scenario {spec.name!r}"
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def scenario_names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"registered: {scenario_names()}")
+    # round-trip for isolation: registry entries must stay pristine
+    return ScenarioSpec.from_dict(_REGISTRY[name].to_dict())
+
+
+def golden_variant(name: str) -> ScenarioSpec:
+    """The scaled-down, fixed-size variant golden traces are recorded at."""
+    return get_scenario(name).scaled(GOLDEN_SCALE)
+
+
+_AUTOSCALE = AutoscaleSpec(enabled=True, max_replicas=4, interval_ms=100.0,
+                           max_batch=8)
+
+register_scenario(ScenarioSpec(
+    name="steady",
+    description="Steady-state Poisson queries at moderate load: the "
+                "baseline regime — no bursts, no mutations, the controller "
+                "should stay quiet.",
+    arrival=ArrivalSpec(process="poisson", target_qps=40.0),
+    mix=MixSpec(query_frac=1.0, update_frac=0.0),
+    n_docs=64, n_requests=240, slo_ms=150.0, seed=0,
+    autoscale=_AUTOSCALE))
+
+register_scenario(ScenarioSpec(
+    name="burst_tolerance",
+    description="On/off bursts at ~7x the mean rate against a query-only "
+                "stream: the elastic-scaling stressor (replica pools must "
+                "absorb bursts, the quality ladder must recover in gaps).",
+    arrival=ArrivalSpec(process="bursty", target_qps=80.0,
+                        burst_cycle_s=1.0, burst_duty=0.15),
+    mix=MixSpec(query_frac=1.0, update_frac=0.0),
+    n_docs=48, n_requests=320, slo_ms=120.0, seed=0,
+    autoscale=_AUTOSCALE))
+
+register_scenario(ScenarioSpec(
+    name="update_storm",
+    description="Mutation-heavy zipfian stream (45% updates + inserts/"
+                "removals) contending with reads: the serialized-writer and "
+                "freshness stressor.",
+    arrival=ArrivalSpec(process="poisson", target_qps=80.0),
+    mix=MixSpec(query_frac=0.45, insert_frac=0.05, update_frac=0.45,
+                removal_frac=0.05, distribution="zipfian"),
+    n_docs=64, n_requests=320, slo_ms=200.0, priority="mutation_first",
+    seed=0, autoscale=_AUTOSCALE))
+
+register_scenario(ScenarioSpec(
+    name="mixed_interference",
+    description="Bursty reads over a 30% zipfian update stream: read/write "
+                "interference under pressure — queries race hot-document "
+                "updates for the same index.",
+    arrival=ArrivalSpec(process="bursty", target_qps=130.0,
+                        burst_cycle_s=1.0, burst_duty=0.3),
+    mix=MixSpec(query_frac=0.7, update_frac=0.3, distribution="zipfian"),
+    n_docs=64, n_requests=320, slo_ms=150.0, seed=0,
+    autoscale=_AUTOSCALE))
+
+register_scenario(ScenarioSpec(
+    name="diurnal_ramp",
+    description="Sinusoidally ramping load (one trough→peak→trough 'day'): "
+                "the slow swell regime where scale-up must track the ramp "
+                "and scale-down must follow it back.",
+    arrival=ArrivalSpec(process="diurnal", target_qps=160.0,
+                        ramp_period_s=4.0, ramp_amplitude=0.8),
+    mix=MixSpec(query_frac=0.9, update_frac=0.1),
+    n_docs=64, n_requests=480, slo_ms=150.0, seed=0,
+    autoscale=_AUTOSCALE))

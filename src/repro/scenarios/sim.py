@@ -1,0 +1,302 @@
+"""Wall-clock-free scenario simulation (the golden-trace engine).
+
+Live serving runs measure real thread scheduling, so their event streams are
+only statistically reproducible.  ``ScenarioSim`` replaces wall time with
+**virtual time**: a discrete-event queueing model of the elastic stage graph
+(per-stage replica pools, micro-batch coalescing, a single serialized
+mutation writer) driven by the *real* seeded arrival schedule, the *real*
+seeded workload stream, and the *real* ``AutoscaleController.step`` — which
+is wall-clock-free by contract, so the whole loop
+
+    arrivals → queueing → snapshots → controller → scaling/knob events →
+    queueing ...
+
+is a pure function of ``(ScenarioSpec, CostModel)``.  Same seed ⇒ identical
+scaling-event stream, knob timeline, latency distribution, and (after the
+runner's quality replay) quality-aware goodput — the determinism the golden
+traces in ``tests/golden/`` pin.
+
+The cost model is deliberately simple: each stage batch costs
+``base_s + per_item_s · n · knob_factor`` virtual seconds, where the knob
+factor scales retrieval with ``nprobe``, rerank with ``rerank_k`` and
+generation with ``max_new`` relative to the scenario's configured baseline —
+the first-order shape of the real kernels, and exactly the levers the
+quality ladder trades on.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.spec import QUERY_STAGE_NAMES
+from repro.serving.accounting import percentile
+from repro.serving.autoscale import (AutoscaleConfig, AutoscaleController,
+                                     Snapshot, StageSample)
+from repro.workload.generator import Request
+
+STAGE_NAMES = tuple(QUERY_STAGE_NAMES.values())
+
+
+@dataclass
+class CostModel:
+    """Virtual service costs (seconds) for the queueing model."""
+
+    base_s: Dict[str, float] = field(default_factory=lambda: {
+        "query_embed": 0.0003, "retrieval": 0.0008,
+        "rerank": 0.0003, "generation": 0.0015})
+    per_item_s: Dict[str, float] = field(default_factory=lambda: {
+        "query_embed": 0.00005, "retrieval": 0.0035,
+        "rerank": 0.0002, "generation": 0.0012})
+    mutation_base_s: float = 0.001
+    mutation_s: float = 0.02        # per op inside a coalesced write batch
+    mutation_batch: int = 8
+
+
+@dataclass
+class SimQuery:
+    """One query's virtual lifecycle (plus its stream position)."""
+
+    stream_idx: int                 # index into the materialized stream
+    t_arrive: float
+    t_done: float = 0.0
+    level: int = 0                  # quality-ladder level at retrieval start
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_arrive
+
+
+@dataclass
+class SimResult:
+    queries: List[SimQuery]
+    mutation_latencies_s: List[float]
+    controller: Optional[AutoscaleController]
+    wall_s: float
+    stage_rows: List[Dict[str, float]]
+    write_batches: List[int]
+
+
+class ScenarioSim:
+    """Discrete-event simulation of one open-loop scenario pass.
+
+    ``requests``/``arrivals`` are the materialized stream (zipped and
+    truncated exactly as ``ServingHarness`` does); ``acfg`` is the autoscale
+    controller config (``None`` disables control — one replica per stage,
+    knobs pinned at level 0).
+    """
+
+    def __init__(self, requests: List[Request], arrivals,
+                 acfg: Optional[AutoscaleConfig],
+                 replicas: Optional[Dict[str, int]] = None,
+                 batch_sizes: Optional[Dict[str, int]] = None,
+                 default_batch: int = 8,
+                 cost: Optional[CostModel] = None):
+        self.requests = requests
+        self.arrivals = [float(t) for t in arrivals]
+        self.cost = cost if cost is not None else CostModel()
+        self.controller = (AutoscaleController(acfg)
+                           if acfg is not None else None)
+        self.ladder: List[Tuple[int, ...]] = (list(acfg.ladder)
+                                              if acfg is not None else [])
+        self.interval_s = acfg.interval_s if acfg is not None else 0.0
+        rep = replicas or {}
+        over = batch_sizes or {}
+        self.replicas = {s: max(1, int(rep.get(s, 1))) for s in STAGE_NAMES}
+        self.batch = {s: int(over.get(s, 0) or default_batch)
+                      for s in STAGE_NAMES}
+        # per-stage queue / pool state
+        self._pending: Dict[str, List[SimQuery]] = {s: [] for s in STAGE_NAMES}
+        self._in_service = {s: 0 for s in STAGE_NAMES}
+        self._busy = {s: 0.0 for s in STAGE_NAMES}
+        self._cap = {s: 0.0 for s in STAGE_NAMES}
+        self._n_batches = {s: 0 for s in STAGE_NAMES}
+        self._n_items = {s: 0 for s in STAGE_NAMES}
+        self._depth_max = {s: 0 for s in STAGE_NAMES}
+        # serialized writer
+        self._wq: List[Tuple[float, Request]] = []
+        self._writer_busy = False
+        self.write_batches: List[int] = []
+        self.mutation_latencies: List[float] = []
+        # completion tracking
+        self.queries: List[SimQuery] = []
+        self._done = 0
+        self._total = 0
+        # small rolling window so the controller's p95 tracks *recent*
+        # completions and recovery (ladder step-up) is observable within a
+        # scenario-length stream
+        self._recent_ms: List[float] = []
+        self._recent_cap = 64
+        # event heap: (t, seq, kind, payload); seq breaks ties reproducibly
+        self._heap: List[Tuple[float, int, str, object]] = []
+        self._seq = 0
+        self._now = 0.0
+
+    # -- knobs ---------------------------------------------------------------
+
+    def _level(self) -> int:
+        return self.controller.level if self.controller is not None else 0
+
+    def _knob_factor(self, stage: str) -> float:
+        """Service-cost multiplier of the current ladder step vs step 0."""
+        if not self.ladder or self._level() == 0:
+            return 1.0
+        base, cur = self.ladder[0], self.ladder[self._level()]
+        if stage == "retrieval":
+            return cur[0] / max(base[0], 1)
+        if stage == "rerank":
+            return cur[1] / max(base[1], 1)
+        if stage == "generation" and len(base) > 2:
+            return cur[2] / max(base[2], 1)
+        return 1.0
+
+    # -- event plumbing ------------------------------------------------------
+
+    def _push(self, t: float, kind: str, payload: object = None) -> None:
+        heapq.heappush(self._heap, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    def _advance(self, t: float) -> None:
+        """Accumulate replica-seconds of capacity up to virtual time t."""
+        dt = t - self._now
+        if dt > 0:
+            for s in STAGE_NAMES:
+                self._cap[s] += self.replicas[s] * dt
+        self._now = t
+
+    # -- stage pools ---------------------------------------------------------
+
+    def _start_batches(self, stage: str) -> None:
+        cost = self.cost
+        while (self._in_service[stage] < self.replicas[stage]
+               and self._pending[stage]):
+            n = min(self.batch[stage], len(self._pending[stage]))
+            items = self._pending[stage][:n]
+            del self._pending[stage][:n]
+            if stage == "retrieval":
+                lvl = self._level()
+                for it in items:
+                    it.level = lvl
+            svc = (cost.base_s[stage]
+                   + cost.per_item_s[stage] * n * self._knob_factor(stage))
+            self._busy[stage] += svc
+            self._in_service[stage] += 1
+            self._n_batches[stage] += 1
+            self._n_items[stage] += n
+            self._push(self._now + svc, "done", (stage, items))
+
+    def _start_writes(self) -> None:
+        if self._writer_busy or not self._wq:
+            return
+        n = min(self.cost.mutation_batch, len(self._wq))
+        batch = self._wq[:n]
+        del self._wq[:n]
+        self._writer_busy = True
+        self.write_batches.append(n)
+        svc = self.cost.mutation_base_s + self.cost.mutation_s * n
+        self._push(self._now + svc, "wdone", batch)
+
+    # -- controller ticks ----------------------------------------------------
+
+    def _snapshot(self) -> Snapshot:
+        stages = []
+        for s in STAGE_NAMES:
+            idle = max(self._cap[s] - self._busy[s], 0.0)
+            stages.append(StageSample(
+                name=s, busy_s=self._busy[s], idle_s=idle, stall_s=0.0,
+                queue_depth=float(len(self._pending[s])),
+                replicas=self.replicas[s], batch_size=self.batch[s]))
+        return Snapshot(t_s=self._now, stages=stages,
+                        p95_ms=percentile(self._recent_ms, 95),
+                        n_completed=self._done)
+
+    def _tick(self) -> None:
+        for ev in self.controller.step(self._snapshot()):
+            if ev.kind == "replicas":
+                self.replicas[ev.stage] = ev.new
+                self._start_batches(ev.stage)
+            elif ev.kind == "batch":
+                self.batch[ev.stage] = ev.new
+                self._start_batches(ev.stage)
+            # "knob" needs no state here: the level lives on the controller
+            # and _knob_factor/_start_batches read it through self._level()
+        if self._done < self._total:
+            self._push(self._now + self.interval_s, "tick")
+
+    # -- run -----------------------------------------------------------------
+
+    def run(self) -> SimResult:
+        for i, (req, t) in enumerate(zip(self.requests, self.arrivals)):
+            self._push(t, "arr", (i, req))
+        self._total = min(len(self.requests), len(self.arrivals))
+        if self.controller is not None and self._total:
+            self._push(self.interval_s, "tick")
+        t_first = self.arrivals[0] if self._total else 0.0
+        t_last_done = t_first
+
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            self._advance(t)
+            if kind == "arr":
+                i, req = payload
+                if req.op == "query":
+                    q = SimQuery(stream_idx=i, t_arrive=t)
+                    self._pending[STAGE_NAMES[0]].append(q)
+                    self._depth_max[STAGE_NAMES[0]] = max(
+                        self._depth_max[STAGE_NAMES[0]],
+                        len(self._pending[STAGE_NAMES[0]]))
+                    self._start_batches(STAGE_NAMES[0])
+                else:
+                    self._wq.append((t, req))
+                    self._start_writes()
+            elif kind == "done":
+                stage, items = payload
+                self._in_service[stage] -= 1
+                si = STAGE_NAMES.index(stage)
+                if si + 1 < len(STAGE_NAMES):
+                    nxt = STAGE_NAMES[si + 1]
+                    self._pending[nxt].extend(items)
+                    self._depth_max[nxt] = max(self._depth_max[nxt],
+                                               len(self._pending[nxt]))
+                    self._start_batches(nxt)
+                else:
+                    for it in items:
+                        it.t_done = t
+                        self.queries.append(it)
+                        self._done += 1
+                        self._recent_ms.append(it.latency_s * 1e3)
+                        if len(self._recent_ms) > self._recent_cap:
+                            del self._recent_ms[:-self._recent_cap]
+                    t_last_done = max(t_last_done, t)
+                self._start_batches(stage)
+            elif kind == "wdone":
+                for t_arr, _req in payload:
+                    self.mutation_latencies.append(t - t_arr)
+                    self._done += 1
+                t_last_done = max(t_last_done, t)
+                self._writer_busy = False
+                self._start_writes()
+            else:                                    # tick
+                self._tick()
+
+        assert self._done == self._total, \
+            f"sim lost items: {self._done} != {self._total}"
+        rows = []
+        for s in STAGE_NAMES:
+            busy, idle = self._busy[s], max(self._cap[s] - self._busy[s], 0.0)
+            rows.append({
+                "stage": s, "busy_s": busy, "idle_s": idle, "stall_s": 0.0,
+                "occupancy": busy / (busy + idle) if busy + idle > 0 else 0.0,
+                "batches": float(self._n_batches[s]),
+                "n_items": float(self._n_items[s]),
+                "queue_depth_max": float(self._depth_max[s]),
+                "replicas": float(self.replicas[s]),
+                "mean_batch": (self._n_items[s] / self._n_batches[s]
+                               if self._n_batches[s] else 0.0)})
+        return SimResult(queries=sorted(self.queries,
+                                        key=lambda q: q.stream_idx),
+                         mutation_latencies_s=list(self.mutation_latencies),
+                         controller=self.controller,
+                         wall_s=max(t_last_done - t_first, 1e-9),
+                         stage_rows=rows,
+                         write_batches=list(self.write_batches))

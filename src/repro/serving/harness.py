@@ -29,7 +29,7 @@ from typing import Callable, Dict, Iterator, List, Optional
 from repro.core.pipeline import RAGPipeline
 from repro.core.registry import build
 from repro.core.spec import PipelineSpec
-from repro.metrics.quality import evaluate_traces
+from repro.metrics.quality import evaluate_traces, mean_quality_weight
 from repro.serving.accounting import LatencyAccountant, RequestRecord
 from repro.serving.arrival import ArrivalConfig, arrival_times
 from repro.serving.batcher import BatchPolicy, ContinuousBatcher, Submission
@@ -250,6 +250,13 @@ class ServingHarness:
         quality: Dict[str, float] = {}
         if self.scfg.evaluate and self.pipeline.traces:
             quality = evaluate_traces(self.pipeline.traces, self.pipeline.db)
+            if "goodput_qps" in summary:
+                # quality-aware SLO goodput: discount goodput by the mean
+                # per-request quality weight, so a knob-ladder "win" that
+                # held latency by degrading recall/answers is priced in
+                w = mean_quality_weight(self.pipeline.traces)
+                summary["quality_weight_mean"] = w
+                summary["quality_goodput_qps"] = summary["goodput_qps"] * w
         return ServingResult(summary=summary,
                              records=list(self.accountant.records),
                              batch_sizes=list(self.batch_sizes),

@@ -1,6 +1,10 @@
 """Autoscale controller: wall-clock-free decision determinism, replica and
-batch scaling toward the bottleneck, the SLO quality ladder, and the
-deterministic bursty-arrival contract the elastic benchmark relies on."""
+batch scaling toward the bottleneck, the SLO quality ladder (2- and
+3-column), timeline JSON round-trips, and the deterministic bursty-arrival
+contract the elastic benchmark relies on."""
+import dataclasses
+import json
+
 import numpy as np
 import pytest
 
@@ -144,6 +148,80 @@ def test_event_stream_deterministic_for_same_snapshots():
     # and the controller's own replay helper agrees with its live stream
     assert [e.to_dict() for e in a.replay_events()] == \
         [e.to_dict() for e in a.events]
+
+
+def _drive_ladder(cfg, p95s):
+    """Step a fresh controller through a synthetic p95 trajectory."""
+    ctl = AutoscaleController(cfg)
+    for i, p95 in enumerate(p95s):
+        ctl.step(snap(0.2 * i, p95=p95))
+    return ctl
+
+
+def test_event_stream_deterministic_on_three_column_ladder():
+    """replay_events determinism must hold for the max_new-bearing ladder,
+    not just the 2-knob one: same snapshots ⇒ identical typed events, and
+    the replay helper agrees with the live stream."""
+    cfg = AutoscaleConfig(slo_ms=100.0, ladder=default_ladder(8, 3, 16),
+                          cooldown_steps=1)
+    rng = np.random.default_rng(1)
+    snaps = [snap(0.1 * i,
+                  busy=list(rng.random(4) * 0.1),
+                  idle=list(rng.random(4) * 0.1),
+                  depth=list((rng.random(4) * 30).round()),
+                  replicas=[1 + int(x) for x in rng.integers(0, 3, 4)],
+                  p95=float(rng.random() * 300))
+             for i in range(40)]
+    a = AutoscaleController(cfg)
+    b = AutoscaleController(cfg)
+    ev_a = [e for s in snaps for e in a.step(s)]
+    ev_b = [e for s in snaps for e in b.step(s)]
+    assert [e.to_dict() for e in ev_a] == [e.to_dict() for e in ev_b]
+    assert [e for e in ev_a if e.kind == "knob"], "ladder never walked"
+    assert [e.to_dict() for e in a.replay_events()] == \
+        [e.to_dict() for e in a.events]
+
+
+def test_three_column_knob_timeline_carries_max_new():
+    cfg = AutoscaleConfig(slo_ms=100.0, ladder=default_ladder(4, 2, 8),
+                          cooldown_steps=0)
+    # walk all the way down (nprobe, then rerank_k, then max_new), then back
+    down = [250.0] * (len(cfg.ladder) + 2)
+    ctl = _drive_ladder(cfg, down + [10.0] * (len(cfg.ladder) + 2))
+    tl = ctl.knob_timeline()
+    assert all("max_new" in row for row in tl)
+    assert min(row["max_new"] for row in tl) == 2      # floor = max_new // 4
+    assert tl[-1]["level"] == 0                        # recovered fully
+    # the max_new column only degrades after nprobe and rerank_k hit 1
+    for row in tl:
+        if row["max_new"] < 8:
+            assert row["nprobe"] == 1 and row["rerank_k"] == 1
+
+
+def test_knob_timeline_roundtrips_through_json_out(tmp_path):
+    """The serve-CLI --json-out document (scaling_events + knob_timeline,
+    json.dump sort_keys) must round-trip losslessly and be reproducible
+    from a fresh controller replaying the recorded snapshots — the contract
+    the golden-trace harness and dashboards parse against."""
+    cfg = AutoscaleConfig(slo_ms=100.0, ladder=default_ladder(8, 3, 16),
+                          cooldown_steps=0)
+    ctl = _drive_ladder(cfg, [250.0] * 4 + [10.0] * 2 + [250.0] * 2)
+    assert len(ctl.knob_timeline()) >= 4
+    path = tmp_path / "run.json"
+    with open(path, "w") as f:
+        json.dump({"scaling_events": ctl.event_dicts(),
+                   "knob_timeline": ctl.knob_timeline()},
+                  f, indent=2, sort_keys=True)
+    with open(path) as f:
+        back = json.load(f)
+    assert back["scaling_events"] == ctl.event_dicts()
+    assert back["knob_timeline"] == ctl.knob_timeline()
+    # a fresh controller fed the same snapshots reproduces both timelines
+    twin = AutoscaleController(dataclasses.replace(cfg))
+    for s in ctl.snapshots:
+        twin.step(s)
+    assert back["scaling_events"] == twin.event_dicts()
+    assert back["knob_timeline"] == twin.knob_timeline()
 
 
 def test_bursty_arrivals_seed_deterministic():

@@ -1,15 +1,19 @@
 """Continuous-batching generation engine: equivalence, per-request metrics,
+the submit/step service API under the open-loop harness schedule,
 concurrent GenStats, GenSpec round-trip, replica cloning."""
 import json
 import threading
+import time
 
 import numpy as np
 import pytest
 
 from repro import configs
-from repro.core.generator import GenStats, ModelLLM
+from repro.core.generator import (GenStats, ModelLLM, build_prompt,
+                                  render_tokens)
 from repro.core.registry import build
 from repro.core.spec import GenSpec, PipelineSpec, StageSpec
+from repro.serving.arrival import ArrivalConfig, arrival_times
 from repro.serving.genengine import (EngineLLM, GenEngine,
                                      engine_from_model_llm)
 
@@ -87,6 +91,47 @@ def test_engine_per_request_ttft_monotone_under_mixed_lengths():
     assert all(t > 0 for t in ttfts)
     assert eng.stats.n_requests == len(PROMPTS)
     assert eng.stats.tokens_out == 3 * len(PROMPTS)
+
+
+def test_engine_service_api_under_open_loop_arrivals(lockstep_llm,
+                                                     lockstep_ref):
+    """ROADMAP gen-engine follow-on, test-first slice: drive ``submit`` /
+    ``step`` exactly the way the open-loop harness injects load — a seeded
+    ``arrival_times`` schedule, submissions at their arrival instants, the
+    engine stepped continuously in between — and assert the service path
+    (a) produces the same tokens as the batch-wise ``generate`` path and
+    (b) anchors each TTFT at the request's *arrival*, so queue wait is
+    included (the quantity ``benchmarks/gen_engine.py`` reports)."""
+    eng = engine_from_model_llm(lockstep_llm, slots=2, chunk_tokens=8)
+    texts = [build_prompt(p, []) for p in PROMPTS]   # the template
+    offsets = arrival_times(ArrivalConfig(            # generate() applies
+        mode="open", process="poisson", target_qps=400.0,
+        n_requests=len(PROMPTS), seed=5))
+    t0 = time.perf_counter()
+    rids, submitted = [], 0
+    while submitted < len(PROMPTS) or eng.busy():
+        now = time.perf_counter()
+        while submitted < len(PROMPTS) \
+                and t0 + offsets[submitted] <= now:
+            rids.append(eng.submit(texts[submitted],
+                                   t_arrive=t0 + offsets[submitted]))
+            submitted += 1
+        if not eng.step() and submitted < len(PROMPTS):
+            time.sleep(max(0.0, t0 + offsets[submitted]
+                           - time.perf_counter()))
+    recs = [eng.records.pop(r) for r in rids]
+    # (a) output-identical to the batch-wise path (and lock-step ModelLLM):
+    # real-time injection changes scheduling, never tokens
+    assert [render_tokens(r.out) for r in recs] == lockstep_ref
+    # (b) TTFT is anchored at the open-loop arrival instant, not admission:
+    # it must equal first-token minus arrival and therefore include any
+    # slot queue wait (strictly positive, bounded by the run's wall time)
+    wall = time.perf_counter() - t0
+    for r, off in zip(recs, offsets):
+        assert r.ttft_s == pytest.approx(r.t_first - (t0 + off))
+        assert 0.0 < r.ttft_s <= wall
+    # per-request samples landed in the shared stats exactly once each
+    assert eng.stats.n_requests == len(PROMPTS)
 
 
 def test_engine_admission_sjf_prefers_short_prompts():

@@ -1,0 +1,232 @@
+"""Scenario suite: spec round-trips, the diurnal arrival process, the
+wall-clock-free simulator's determinism, golden-trace replay (the tier-1
+regression contract), quality-aware goodput pricing, and the cross-executor
+equivalence matrix."""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.interfaces import StageTrace
+from repro.core.spec import PipelineSpec
+from repro.metrics.quality import mean_quality_weight, trace_quality
+from repro.scenarios import (GOLDEN_DIR, ScenarioRunner, ScenarioSpec,
+                             diff_golden, get_scenario, golden_dict,
+                             golden_variant, scenario_names)
+from repro.serving.arrival import ArrivalConfig, arrival_times
+
+ALL_SCENARIOS = ["burst_tolerance", "diurnal_ramp", "mixed_interference",
+                 "steady", "update_storm"]
+
+
+# -- spec ---------------------------------------------------------------------
+
+
+def test_scenario_catalog_registers_the_suite():
+    assert scenario_names() == ALL_SCENARIOS
+
+
+def test_scenario_spec_json_roundtrip():
+    spec = get_scenario("mixed_interference")
+    back = ScenarioSpec.from_json(spec.to_json())
+    assert back == spec
+    # unknown keys rejected at every nesting level
+    d = json.loads(spec.to_json())
+    d["bogus"] = 1
+    with pytest.raises(ValueError):
+        ScenarioSpec.from_dict(d)
+    d = json.loads(spec.to_json())
+    d["arrival"]["bogus"] = 1
+    with pytest.raises(ValueError):
+        ScenarioSpec.from_dict(d)
+    d = json.loads(spec.to_json())
+    d["mix"]["bogus"] = 1
+    with pytest.raises(ValueError):
+        ScenarioSpec.from_dict(d)
+
+
+def test_scenario_registry_returns_isolated_copies():
+    a = get_scenario("steady")
+    a.mix.query_frac = 0.0
+    a.pipeline["vectordb"] = {"options": {"nprobe": 1}}
+    b = get_scenario("steady")
+    assert b.mix.query_frac == 1.0
+    assert b.pipeline == {}
+
+
+def test_scenario_scaled_preserves_dynamics_knobs():
+    spec = get_scenario("burst_tolerance")
+    half = spec.scaled(0.5)
+    assert half.n_requests == spec.n_requests // 2
+    assert half.n_docs == spec.n_docs // 2
+    assert (half.arrival, half.mix, half.slo_ms, half.seed) \
+        == (spec.arrival, spec.mix, spec.slo_ms, spec.seed)
+
+
+def test_scenario_maps_onto_runtime_configs():
+    spec = get_scenario("update_storm")
+    acfg = spec.arrival_config()
+    wcfg = spec.workload_config()
+    assert acfg.n_requests == wcfg.n_requests == spec.n_requests
+    assert acfg.seed == wcfg.seed == spec.seed
+    assert wcfg.update_frac == spec.mix.update_frac
+    assert wcfg.distribution == "zipfian"
+
+
+def test_pipeline_spec_merged_deep_merges_component_options():
+    spec = get_scenario("steady").replace(
+        pipeline={"vectordb": {"options": {"nprobe": 2}}, "rerank_k": 2})
+    pspec = spec.pipeline_spec()
+    assert pspec.vectordb.options["nprobe"] == 2
+    assert pspec.vectordb.options["nlist"] == 16     # base option survives
+    assert pspec.rerank_k == 2
+    # a full-replace override still round-trips through validation
+    with pytest.raises(ValueError):
+        PipelineSpec().merged({"bogus_key": 1})
+
+
+# -- diurnal arrivals ---------------------------------------------------------
+
+
+def test_diurnal_arrivals_seed_deterministic_and_nondecreasing():
+    cfg = dict(process="diurnal", target_qps=50.0, n_requests=400,
+               ramp_period_s=4.0, ramp_amplitude=0.8)
+    a = arrival_times(ArrivalConfig(seed=1, **cfg))
+    b = arrival_times(ArrivalConfig(seed=1, **cfg))
+    c = arrival_times(ArrivalConfig(seed=2, **cfg))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert (np.diff(a) >= 0).all()
+    rate = (len(a) - 1) / a[-1]
+    assert 35 < rate < 70, f"long-run diurnal rate {rate:.1f}"
+
+
+def test_diurnal_arrivals_ramp_between_trough_and_peak():
+    """More arrivals land in the peak half-period than in the trough half."""
+    cfg = ArrivalConfig(process="diurnal", target_qps=100.0, n_requests=3000,
+                        ramp_period_s=2.0, ramp_amplitude=0.9, seed=0)
+    t = arrival_times(cfg)
+    phase = (t % cfg.ramp_period_s) / cfg.ramp_period_s
+    peak_half = ((phase >= 0.25) & (phase < 0.75)).sum()   # around sin max
+    assert peak_half > 0.6 * len(t)
+
+
+# -- quality weights ----------------------------------------------------------
+
+
+def test_trace_quality_prices_recall_and_answer():
+    full = StageTrace(answer="val1", ground_truth="val1",
+                      reranked_ids=[3], gold_chunk_ids=[3])
+    missed = StageTrace(answer="wrong", ground_truth="val1",
+                        reranked_ids=[9], gold_chunk_ids=[3])
+    half = StageTrace(answer="val1", ground_truth="val1",
+                      reranked_ids=[9], gold_chunk_ids=[3])
+    assert trace_quality(full) == 1.0
+    assert trace_quality(missed) == 0.0
+    assert trace_quality(half) == 0.5
+    # ungradable requests weigh 1: the weight only discounts
+    assert trace_quality(StageTrace(answer="x")) == 1.0
+    assert mean_quality_weight([full, missed]) == 0.5
+    assert mean_quality_weight([]) == 1.0
+
+
+# -- the simulator ------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def burst_report():
+    spec = golden_variant("burst_tolerance")
+    return ScenarioRunner(spec).simulate(), spec
+
+
+def test_sim_is_seed_deterministic(burst_report):
+    report, spec = burst_report
+    again = ScenarioRunner(spec).simulate()
+    assert golden_dict(again, spec) == golden_dict(report, spec)
+    assert again.scaling_events == report.scaling_events
+
+
+def test_sim_controller_replays_deterministically(burst_report):
+    report, _ = burst_report
+    assert report.deterministic_replay
+
+
+def test_sim_quality_goodput_prices_the_knob_ladder(burst_report):
+    """The burst scenario walks the ladder down, so quality-aware goodput
+    must be strictly cheaper than raw SLO goodput — the honest pricing the
+    knob-only 'win' was missing."""
+    report, _ = burst_report
+    s = report.summary
+    assert any(e["kind"] == "knob" for e in report.scaling_events)
+    assert 0.0 < s["quality_weight_mean"] < 1.0
+    assert 0.0 < s["quality_goodput_qps"] < s["goodput_qps"]
+    assert report.quality["context_recall"] < 1.0   # the priced-in cost
+
+
+def test_sim_different_seed_different_trace():
+    spec = golden_variant("burst_tolerance")
+    base = ScenarioRunner(spec).simulate()
+    other = ScenarioRunner(spec.replace(seed=7)).simulate()
+    assert golden_dict(other, spec) != golden_dict(base, spec)
+
+
+def test_sim_accounts_mutations_separately():
+    report = ScenarioRunner(golden_variant("update_storm")).simulate()
+    s = report.summary
+    assert s["n_mutations"] > 0
+    assert s["n_queries"] + s["n_mutations"] == s["n_requests"]
+    assert s["p95_mutation_latency_ms"] > 0
+
+
+# -- golden traces (the tier-1 regression contract) --------------------------
+
+
+@pytest.mark.parametrize("path", sorted(
+    glob.glob(os.path.join(GOLDEN_DIR, "*.json"))),
+    ids=lambda p: os.path.splitext(os.path.basename(p))[0])
+def test_golden_trace_replays_bit_for_bit(path):
+    with open(path) as f:
+        expected = json.load(f)
+    name = expected["scenario"]
+    spec = golden_variant(name)
+    report = ScenarioRunner(spec).simulate()
+    mismatches = diff_golden(expected, golden_dict(report, spec))
+    assert not mismatches, (
+        "golden-trace drift (scripts/regen_golden.sh re-records, but only "
+        "after an understood behavior change):\n" + "\n".join(mismatches))
+
+
+def test_golden_traces_cover_every_scenario():
+    found = {os.path.splitext(os.path.basename(p))[0]
+             for p in glob.glob(os.path.join(GOLDEN_DIR, "*.json"))}
+    assert found == set(ALL_SCENARIOS)
+
+
+# -- cross-executor equivalence matrix ---------------------------------------
+
+
+def _outputs(traces):
+    return [(t.answer, t.retrieved_ids, t.reranked_ids) for t in traces]
+
+
+@pytest.mark.parametrize("name", [
+    "steady",
+    "update_storm",
+    pytest.param("burst_tolerance", marks=pytest.mark.slow),
+    pytest.param("mixed_interference", marks=pytest.mark.slow),
+    pytest.param("diurnal_ramp", marks=pytest.mark.slow),
+])
+def test_scenario_outputs_identical_across_executors(name):
+    """Every registered scenario's stream must produce identical per-request
+    outputs on lock-step vs staged vs elastic execution (same seed):
+    executors buy scheduling freedom, never different answers."""
+    spec = get_scenario(name).replace(n_docs=16, n_requests=48)
+    runner = ScenarioRunner(spec)
+    lock = _outputs(runner.replay_outputs("lockstep"))
+    staged = _outputs(runner.replay_outputs("staged"))
+    elastic = _outputs(runner.replay_outputs("elastic"))
+    assert len(lock) > 0
+    assert staged == lock
+    assert elastic == lock
