@@ -8,7 +8,7 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (accuracy_eval, elastic_scaling, gen_engine,
+from benchmarks import (accuracy_eval, chaos, elastic_scaling, gen_engine,
                         index_schemes, indexing_breakdown, monitor_overhead,
                         query_breakdown, resource_limits,
                         resource_utilization, scenarios, sensitivity,
@@ -30,6 +30,7 @@ MODULES = {
     "elastic_scaling": elastic_scaling,       # static vs elastic + knob ladder
     "gen_engine": gen_engine,                 # lock-step vs continuous batching
     "scenarios": scenarios,                   # named scenario suite (sim mode)
+    "chaos": chaos,                           # fault injection + recovery
 }
 
 

@@ -31,4 +31,10 @@ echo "== tier-1: scenario golden-trace replay (deterministic sim) =="
 # goodput) trace matches tests/golden/ bit-for-bit
 python -m benchmarks.scenarios --check > /dev/null
 
+echo "== tier-1: chaos recovery smoke (fault injection, deterministic) =="
+# --check asserts: chaos scenarios are bit-deterministic and lossless
+# (availability + error_rate == 1, replica kills lose zero requests),
+# kill->respawn pairing, straggler retire, writer-stall spike + drain
+python -m benchmarks.chaos --check > /dev/null
+
 echo "tier-1 OK"

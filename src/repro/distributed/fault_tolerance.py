@@ -36,12 +36,21 @@ class Heartbeat:
 
 
 class HeartbeatTracker:
-    """Coordinator view of worker liveness."""
+    """Coordinator view of worker liveness.
+
+    ``grace_s`` is the startup grace period for hosts that have never
+    stamped: a freshly-launched fleet should not read as all-dead at t=0
+    just because nobody has completed a step yet.  It defaults to
+    ``timeout_s``, anchored at tracker construction.
+    """
 
     def __init__(self, n_hosts: int, timeout_s: float = 60.0,
-                 directory: Optional[str] = None):
+                 directory: Optional[str] = None,
+                 grace_s: Optional[float] = None):
         self.n_hosts = n_hosts
         self.timeout_s = timeout_s
+        self.grace_s = timeout_s if grace_s is None else grace_s
+        self.t_start = time.time()
         self.dir = directory
         if directory:
             os.makedirs(directory, exist_ok=True)
@@ -75,7 +84,11 @@ class HeartbeatTracker:
         dead = []
         for h in range(self.n_hosts):
             hb = self.beats.get(h)
-            if hb is None or now - hb.t > self.timeout_s:
+            if hb is None:
+                # never stamped: dead only once the startup grace elapses
+                if now - self.t_start > self.grace_s:
+                    dead.append(h)
+            elif now - hb.t > self.timeout_s:
                 dead.append(h)
         return dead
 
@@ -84,26 +97,39 @@ class HeartbeatTracker:
 
 
 class StragglerDetector:
-    """Quantile-based straggler flagging over per-host step durations."""
+    """Quantile-based straggler flagging over per-host step durations.
+
+    Keys are opaque hashables: training uses host ids, elastic serving uses
+    per-replica ids within one stage pool.  ``min_samples`` guards against
+    flagging off a single slow batch; ``forget`` drops a retired member's
+    history so its replacement starts clean.
+    """
 
     def __init__(self, window: int = 50, quantile: float = 0.5,
-                 tolerance: float = 2.0):
+                 tolerance: float = 2.0, min_samples: int = 1):
         self.window = window
         self.quantile = quantile
         self.tolerance = tolerance
-        self.durations: Dict[int, List[float]] = {}
+        self.min_samples = min_samples
+        self.durations: Dict[object, List[float]] = {}
 
-    def record(self, host_id: int, duration_s: float) -> None:
+    def record(self, host_id, duration_s: float) -> None:
         xs = self.durations.setdefault(host_id, [])
         xs.append(duration_s)
         if len(xs) > self.window:
             xs.pop(0)
 
-    def stragglers(self) -> List[int]:
+    def forget(self, host_id) -> None:
+        self.durations.pop(host_id, None)
+
+    def stragglers(self) -> List:
         if len(self.durations) < 2:
             return []
         medians = {h: float(np.median(xs))
-                   for h, xs in self.durations.items() if xs}
+                   for h, xs in self.durations.items()
+                   if len(xs) >= self.min_samples}
+        if len(medians) < 2:
+            return []
         fleet = float(np.quantile(list(medians.values()), self.quantile))
         return [h for h, m in medians.items()
                 if m > self.tolerance * fleet]

@@ -95,6 +95,18 @@ def run_scenario(args) -> None:
     print(f"scaling events: {len(report.scaling_events)}, knob moves: "
           f"{len(report.knob_timeline)}, deterministic replay: "
           f"{report.deterministic_replay}")
+    if spec.faults.enabled:
+        ev = report.fault_events
+        n_retires = sum(1 for e in report.scaling_events
+                        if e["kind"] == "retire")
+        print(f"chaos: {sum(1 for e in ev if e['action'] == 'inject')} "
+              f"faults injected, "
+              f"{sum(1 for e in ev if e['action'] == 'respawn')} respawns, "
+              f"{n_retires} straggler retires; availability "
+              f"{s.get('availability', 1.0):.3f}, error rate "
+              f"{s.get('error_rate', 0.0):.3f} "
+              f"({int(s.get('n_failed', 0))} failed / "
+              f"{int(s.get('n_retried', 0))} retried)")
     print("quality:", {k: round(v, 3) for k, v in report.quality.items()})
     if args.json_out:
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)

@@ -13,6 +13,7 @@ from __future__ import annotations
 from typing import Dict, List
 
 from repro.core.spec import AutoscaleSpec
+from repro.serving.faults import FaultEvent, FaultSpec
 
 from repro.scenarios.spec import ArrivalSpec, MixSpec, ScenarioSpec
 
@@ -90,6 +91,57 @@ register_scenario(ScenarioSpec(
     mix=MixSpec(query_frac=0.7, update_frac=0.3, distribution="zipfian"),
     n_docs=64, n_requests=320, slo_ms=150.0, seed=0,
     autoscale=_AUTOSCALE))
+
+# -- chaos scenarios (ROADMAP item 5: fault injection + recovery) ------------
+
+register_scenario(ScenarioSpec(
+    name="replica_failure",
+    description="Two replica kills (retrieval, then generation) against a "
+                "steady query stream with auto-respawn: in-flight batches "
+                "must requeue within the retry budget and every request "
+                "must reach a terminal state — the failure-isolation "
+                "stressor.",
+    arrival=ArrivalSpec(process="poisson", target_qps=60.0),
+    mix=MixSpec(query_frac=1.0, update_frac=0.0),
+    n_docs=48, n_requests=320, slo_ms=180.0, seed=0,
+    autoscale=_AUTOSCALE,
+    faults=FaultSpec(events=[
+        # times tuned to land mid-batch at the golden size, so the pinned
+        # recovery timeline exercises the requeue path, not just idle kills
+        FaultEvent(t_s=0.504, kind="replica_kill", stage="retrieval"),
+        FaultEvent(t_s=1.208, kind="replica_kill", stage="generation"),
+    ], max_retries=2, respawn=True, respawn_delay_s=0.25),
+    pipeline={"vectordb": {"replicas": 2}, "llm": {"replicas": 2}}))
+
+register_scenario(ScenarioSpec(
+    name="straggler_degrade",
+    description="One retrieval replica turns 6x slow-straggler mid-run; "
+                "per-replica service-time tracking must flag it so the "
+                "controller retires and replaces it — the detection/"
+                "recovery stressor.",
+    arrival=ArrivalSpec(process="poisson", target_qps=60.0),
+    mix=MixSpec(query_frac=1.0, update_frac=0.0),
+    n_docs=48, n_requests=320, slo_ms=180.0, seed=0,
+    autoscale=_AUTOSCALE,
+    faults=FaultSpec(events=[
+        FaultEvent(t_s=0.3, kind="replica_stall", stage="retrieval",
+                   factor=6.0),
+    ], detect=True, straggler_tolerance=1.5, straggler_window=16),
+    pipeline={"vectordb": {"replicas": 2}}))
+
+register_scenario(ScenarioSpec(
+    name="writer_stall",
+    description="The serialized mutation writer freezes for 1s under an "
+                "update-heavy stream: mutations back up and must drain on "
+                "resume while reads keep flowing — the write-path "
+                "degradation stressor.",
+    arrival=ArrivalSpec(process="poisson", target_qps=60.0),
+    mix=MixSpec(query_frac=0.6, update_frac=0.4, distribution="zipfian"),
+    n_docs=64, n_requests=240, slo_ms=200.0, priority="mutation_first",
+    seed=0, autoscale=_AUTOSCALE,
+    faults=FaultSpec(events=[
+        FaultEvent(t_s=0.5, kind="writer_stall", duration_s=1.0),
+    ])))
 
 register_scenario(ScenarioSpec(
     name="diurnal_ramp",

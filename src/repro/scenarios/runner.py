@@ -32,6 +32,7 @@ from repro.serving.arrival import arrival_times
 from repro.serving.autoscale import AutoscaleConfig, AutoscaleController
 from repro.serving.batcher import BatchPolicy
 from repro.serving.elastic import ElasticExecutor
+from repro.serving.faults import FaultInjector
 from repro.serving.harness import ServingConfig, ServingHarness
 from repro.serving.staged import StagedExecutor
 from repro.workload.corpus import CorpusConfig, SyntheticCorpus
@@ -44,7 +45,9 @@ from repro.scenarios.spec import ScenarioSpec
 # the stable subset of summary keys pinned by golden traces
 GOLDEN_SUMMARY_KEYS = ("n_queries", "n_mutations", "slo_attainment",
                        "goodput_qps", "quality_goodput_qps",
-                       "quality_weight_mean", "p95_latency_ms")
+                       "quality_weight_mean", "p95_latency_ms",
+                       "n_failed", "error_rate", "availability",
+                       "p95_mutation_latency_ms")
 
 
 @dataclass
@@ -60,6 +63,7 @@ class ScenarioReport:
     scaling_events: List[Dict] = field(default_factory=list)
     knob_timeline: List[Dict] = field(default_factory=list)
     stage_report: List[Dict] = field(default_factory=list)
+    fault_events: List[Dict] = field(default_factory=list)
     deterministic_replay: bool = True
 
     def to_dict(self) -> Dict[str, object]:
@@ -69,6 +73,7 @@ class ScenarioReport:
             "quality": self.quality, "scaling_events": self.scaling_events,
             "knob_timeline": self.knob_timeline,
             "stage_report": self.stage_report,
+            "fault_events": self.fault_events,
             "deterministic_replay": self.deterministic_replay,
         }
 
@@ -136,11 +141,14 @@ class ScenarioRunner:
         sim = ScenarioSim(requests, times[:n], acfg,
                           replicas=pspec.stage_replicas(),
                           batch_sizes=pspec.stage_batch_sizes(),
-                          cost=cost)
+                          cost=cost, faults=spec.faults)
         res = sim.run()
 
         # quality replay: real pipeline, stream order, knobs pinned to each
-        # query's simulated ladder level
+        # query's simulated ladder level; terminally-failed queries never
+        # produced an answer, so they are excluded (and priced into
+        # availability instead)
+        failed_idx = {q.stream_idx for q in res.failed}
         ladder = list(acfg.ladder) if acfg is not None else []
         level_of = {q.stream_idx: q.level for q in res.queries}
         traces: List = []
@@ -164,6 +172,8 @@ class ScenarioRunner:
 
         for i, req in enumerate(requests):
             if req.op == "query":
+                if i in failed_idx:
+                    continue
                 lvl = level_of[i]
                 if pend and (lvl != pend_level or len(pend) >= 8):
                     flush()
@@ -196,6 +206,11 @@ class ScenarioRunner:
             "offered_qps": spec.arrival.target_qps,
             "achieved_qps": len(res.queries) / wall,
             "slo_ms": spec.slo_ms,
+            # every request is terminal (completed or explicitly failed)
+            "n_failed": float(len(res.failed)),
+            "n_retried": float(res.n_retried),
+            "error_rate": len(res.failed) / n if n else 0.0,
+            "availability": (n - len(res.failed)) / n if n else 1.0,
         }
         if lat_ms:
             for q_ in (50, 95, 99):
@@ -220,7 +235,8 @@ class ScenarioRunner:
             scenario=spec.name, mode="sim", seed=spec.seed, n_requests=n,
             summary=summary, quality=evaluate_traces(traces, pipe.db),
             scaling_events=events, knob_timeline=timeline,
-            stage_report=res.stage_rows, deterministic_replay=det)
+            stage_report=res.stage_rows, fault_events=res.fault_log,
+            deterministic_replay=det)
 
     # -- live serving --------------------------------------------------------
 
@@ -235,27 +251,39 @@ class ScenarioRunner:
             policy=BatchPolicy(max_batch=batch, max_wait_s=batch_timeout_s,
                                priority=spec.priority),
             slo_ms=spec.slo_ms, evaluate=True, time_scale=time_scale)
-        executor = controller = None
+        executor = controller = injector = None
         acfg = self._autoscale_config()
         if acfg is not None:
             pspec = spec.pipeline_spec()
             executor = ElasticExecutor(
                 pipe, replicas=pspec.stage_replicas(),
                 batch_sizes=pspec.stage_batch_sizes(), default_batch=batch,
-                max_replicas=spec.autoscale.max_replicas)
+                max_replicas=spec.autoscale.max_replicas,
+                max_retries=spec.faults.max_retries,
+                straggler_tolerance=(spec.faults.straggler_tolerance
+                                     if spec.faults.detect else 0.0),
+                straggler_window=spec.faults.straggler_window)
             controller = AutoscaleController(acfg, executor=executor)
+            if spec.faults.enabled:
+                injector = FaultInjector(executor, spec.faults,
+                                         time_scale=time_scale)
         harness = ServingHarness(pipe, corpus, spec.workload_config(), scfg,
                                  executor=executor)
         if controller is not None:
             controller.start()
+        if injector is not None:
+            injector.start()
         try:
             res = harness.run()
         finally:
+            if injector is not None:
+                injector.stop()
             if controller is not None:
                 controller.stop()
         events: List[Dict] = []
         timeline: List[Dict] = []
         stage_rows: List[Dict] = []
+        fault_events: List[Dict] = []
         det = True
         if controller is not None:
             events = controller.event_dicts()
@@ -263,12 +291,15 @@ class ScenarioRunner:
             stage_rows = [st.row() for st in executor.stats]
             det = [e.to_dict()
                    for e in controller.replay_events()] == events
+        if injector is not None:
+            fault_events = injector.applied_events()
         return ScenarioReport(
             scenario=spec.name, mode="live", seed=spec.seed,
             n_requests=int(res.summary.get("n_requests", 0)),
             summary=res.summary, quality=res.quality,
             scaling_events=events, knob_timeline=timeline,
-            stage_report=stage_rows, deterministic_replay=det)
+            stage_report=stage_rows, fault_events=fault_events,
+            deterministic_replay=det)
 
     # -- cross-executor equivalence (the test-matrix surface) ----------------
 
@@ -339,6 +370,7 @@ def golden_dict(report: ScenarioReport, spec: ScenarioSpec) -> Dict[str, object]
         "n_requests": report.n_requests,
         "scaling_events": report.scaling_events,
         "knob_timeline": report.knob_timeline,
+        "fault_events": report.fault_events,
         "summary": {k: round(float(report.summary[k]), 6)
                     for k in GOLDEN_SUMMARY_KEYS if k in report.summary},
         "quality": {k: round(float(v), 6)

@@ -22,6 +22,17 @@ factor scales retrieval with ``nprobe``, rerank with ``rerank_k`` and
 generation with ``max_new`` relative to the scenario's configured baseline —
 the first-order shape of the real kernels, and exactly the levers the
 quality ladder trades on.
+
+Fault modeling mirrors the live executor's chaos contract in virtual time:
+replica pools are **slots with stable rids** (spawn = fresh monotonic rid,
+lowest idle rid serves first), a ``replica_kill`` dooms its slot — the
+in-flight batch's items requeue at the queue head with a ``max_retries``
+budget, then fail terminally — and a respawn arrives ``respawn_delay_s``
+later; a ``replica_stall`` multiplies that slot's service time (feeding a
+``StragglerDetector`` when detection is on, so the controller's ``retire``
+events land in the same golden-pinned stream as scaling); a ``writer_stall``
+freezes the serialized writer and lets the backlog drain on resume.  All of
+it is heap events, so recovery timelines are bit-deterministic.
 """
 from __future__ import annotations
 
@@ -30,9 +41,11 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.spec import QUERY_STAGE_NAMES
+from repro.distributed.fault_tolerance import StragglerDetector
 from repro.serving.accounting import percentile
 from repro.serving.autoscale import (AutoscaleConfig, AutoscaleController,
                                      Snapshot, StageSample)
+from repro.serving.faults import FaultSpec
 from repro.workload.generator import Request
 
 STAGE_NAMES = tuple(QUERY_STAGE_NAMES.values())
@@ -61,6 +74,8 @@ class SimQuery:
     t_arrive: float
     t_done: float = 0.0
     level: int = 0                  # quality-ladder level at retrieval start
+    retries: int = 0                # requeues survived (replica kills)
+    failed: bool = False            # terminal failure (retry budget spent)
 
     @property
     def latency_s(self) -> float:
@@ -69,12 +84,15 @@ class SimQuery:
 
 @dataclass
 class SimResult:
-    queries: List[SimQuery]
+    queries: List[SimQuery]         # completed OK, stream order
     mutation_latencies_s: List[float]
     controller: Optional[AutoscaleController]
     wall_s: float
     stage_rows: List[Dict[str, float]]
     write_batches: List[int]
+    failed: List[SimQuery] = field(default_factory=list)  # terminal failures
+    fault_log: List[Dict[str, object]] = field(default_factory=list)
+    n_retried: int = 0
 
 
 class ScenarioSim:
@@ -91,7 +109,8 @@ class ScenarioSim:
                  replicas: Optional[Dict[str, int]] = None,
                  batch_sizes: Optional[Dict[str, int]] = None,
                  default_batch: int = 8,
-                 cost: Optional[CostModel] = None):
+                 cost: Optional[CostModel] = None,
+                 faults: Optional[FaultSpec] = None):
         self.requests = requests
         self.arrivals = [float(t) for t in arrivals]
         self.cost = cost if cost is not None else CostModel()
@@ -105,17 +124,39 @@ class ScenarioSim:
         self.replicas = {s: max(1, int(rep.get(s, 1))) for s in STAGE_NAMES}
         self.batch = {s: int(over.get(s, 0) or default_batch)
                       for s in STAGE_NAMES}
-        # per-stage queue / pool state
+        # per-stage queue / pool state — pools are slots with stable rids:
+        # lowest idle rid serves first, spawns mint fresh monotonic rids,
+        # so fault targeting and recovery are deterministic
         self._pending: Dict[str, List[SimQuery]] = {s: [] for s in STAGE_NAMES}
-        self._in_service = {s: 0 for s in STAGE_NAMES}
+        self._free: Dict[str, List[int]] = {
+            s: list(range(self.replicas[s])) for s in STAGE_NAMES}
+        self._next_rid: Dict[str, int] = {s: self.replicas[s]
+                                          for s in STAGE_NAMES}
+        self._busy_items: Dict[Tuple[str, int], List[SimQuery]] = {}
+        self._doomed: set = set()          # (stage, rid) killed while busy
+        self._shrink_pend = {s: 0 for s in STAGE_NAMES}  # retire on done
+        self._slow: Dict[Tuple[str, int], float] = {}    # straggler factors
         self._busy = {s: 0.0 for s in STAGE_NAMES}
         self._cap = {s: 0.0 for s in STAGE_NAMES}
         self._n_batches = {s: 0 for s in STAGE_NAMES}
         self._n_items = {s: 0 for s in STAGE_NAMES}
         self._depth_max = {s: 0 for s in STAGE_NAMES}
+        # chaos state
+        self.faults = faults if faults is not None else FaultSpec()
+        self.max_retries = self.faults.max_retries
+        self.fault_log: List[Dict[str, object]] = []
+        self.failed: List[SimQuery] = []
+        self.n_retried = 0
+        self._detect = [None] * len(STAGE_NAMES)
+        if self.faults.detect:
+            self._detect = [StragglerDetector(
+                window=self.faults.straggler_window,
+                tolerance=self.faults.straggler_tolerance,
+                min_samples=2) for _ in STAGE_NAMES]
         # serialized writer
         self._wq: List[Tuple[float, Request]] = []
         self._writer_busy = False
+        self._wstall_until = 0.0
         self.write_batches: List[int] = []
         self.mutation_latencies: List[float] = []
         # completion tracking
@@ -168,8 +209,8 @@ class ScenarioSim:
 
     def _start_batches(self, stage: str) -> None:
         cost = self.cost
-        while (self._in_service[stage] < self.replicas[stage]
-               and self._pending[stage]):
+        while self._free[stage] and self._pending[stage]:
+            rid = self._free[stage].pop(0)       # lowest idle rid first
             n = min(self.batch[stage], len(self._pending[stage]))
             items = self._pending[stage][:n]
             del self._pending[stage][:n]
@@ -179,14 +220,86 @@ class ScenarioSim:
                     it.level = lvl
             svc = (cost.base_s[stage]
                    + cost.per_item_s[stage] * n * self._knob_factor(stage))
+            svc *= self._slow.get((stage, rid), 1.0)   # straggler drag
             self._busy[stage] += svc
-            self._in_service[stage] += 1
             self._n_batches[stage] += 1
             self._n_items[stage] += n
-            self._push(self._now + svc, "done", (stage, items))
+            self._busy_items[(stage, rid)] = items
+            if self._detect[STAGE_NAMES.index(stage)] is not None:
+                self._detect[STAGE_NAMES.index(stage)].record(
+                    rid, svc / max(n, 1))
+            self._push(self._now + svc, "done", (stage, rid))
+
+    # -- replica slots (chaos model) ----------------------------------------
+
+    def _alive_rids(self, stage: str) -> List[int]:
+        busy = [r for (s, r) in self._busy_items if s == stage
+                and (s, r) not in self._doomed]
+        return sorted(self._free[stage] + busy)
+
+    def _spawn_slot(self, stage: str) -> int:
+        rid = self._next_rid[stage]
+        self._next_rid[stage] += 1
+        self._free[stage].append(rid)
+        self._free[stage].sort()
+        self.replicas[stage] += 1
+        return rid
+
+    def _kill_slot(self, stage: str, rid: int) -> None:
+        """Remove one slot; a busy victim's batch requeues at the queue head
+        with the retry budget, exactly like the live executor's kill path."""
+        self.replicas[stage] = max(0, self.replicas[stage] - 1)
+        self._slow.pop((stage, rid), None)
+        det = self._detect[STAGE_NAMES.index(stage)]
+        if det is not None:
+            det.forget(rid)
+        if rid in self._free[stage]:
+            self._free[stage].remove(rid)
+            return
+        items = self._busy_items.get((stage, rid))
+        if items is None:
+            return
+        self._doomed.add((stage, rid))       # its done event is discarded
+        survivors: List[SimQuery] = []
+        for it in items:
+            it.retries += 1
+            if it.retries > self.max_retries:
+                it.failed = True
+                it.t_done = self._now
+                self.failed.append(it)
+                self._done += 1
+            else:
+                self.n_retried += 1
+                survivors.append(it)
+        self._pending[stage][:0] = survivors
+        self._start_batches(stage)
+
+    def _retire_slot(self, stage: str, rid: int) -> None:
+        """Controller retire: kill the flagged slot, spawn a fresh one —
+        net pool width unchanged."""
+        if rid not in self._alive_rids(stage):
+            return
+        self._kill_slot(stage, rid)
+        self._spawn_slot(stage)
+        self._start_batches(stage)
+
+    def _set_alive(self, stage: str, n: int) -> None:
+        """Controller replica scaling on the slot model: grow mints fresh
+        rids; shrink removes idle slots (highest rid first) and lets busy
+        ones finish their current batch before retiring ('done' handles
+        ``_shrink_pend``) — matching the live executor's drain-then-exit."""
+        while self.replicas[stage] < n:
+            self._spawn_slot(stage)
+        excess = self.replicas[stage] - n
+        while excess > 0 and self._free[stage]:
+            rid = self._free[stage].pop()     # idle victims: highest rid
+            self._slow.pop((stage, rid), None)
+            excess -= 1
+        self._shrink_pend[stage] += excess
+        self.replicas[stage] = n
 
     def _start_writes(self) -> None:
-        if self._writer_busy or not self._wq:
+        if self._writer_busy or not self._wq or self._now < self._wstall_until:
             return
         n = min(self.cost.mutation_batch, len(self._wq))
         batch = self._wq[:n]
@@ -206,22 +319,64 @@ class ScenarioSim:
                 name=s, busy_s=self._busy[s], idle_s=idle, stall_s=0.0,
                 queue_depth=float(len(self._pending[s])),
                 replicas=self.replicas[s], batch_size=self.batch[s]))
+        stragglers: List[Tuple[str, int]] = []
+        for si, s in enumerate(STAGE_NAMES):
+            if self._detect[si] is not None:
+                stragglers += [(s, int(r))
+                               for r in self._detect[si].stragglers()]
         return Snapshot(t_s=self._now, stages=stages,
                         p95_ms=percentile(self._recent_ms, 95),
-                        n_completed=self._done)
+                        n_completed=self._done, stragglers=stragglers)
 
     def _tick(self) -> None:
         for ev in self.controller.step(self._snapshot()):
             if ev.kind == "replicas":
-                self.replicas[ev.stage] = ev.new
+                self._set_alive(ev.stage, ev.new)
                 self._start_batches(ev.stage)
             elif ev.kind == "batch":
                 self.batch[ev.stage] = ev.new
                 self._start_batches(ev.stage)
+            elif ev.kind == "retire":
+                self._retire_slot(ev.stage, ev.prev)
             # "knob" needs no state here: the level lives on the controller
             # and _knob_factor/_start_batches read it through self._level()
         if self._done < self._total:
             self._push(self._now + self.interval_s, "tick")
+
+    # -- fault events --------------------------------------------------------
+
+    def _apply_fault(self, ev) -> None:
+        entry: Dict[str, object] = {"t_s": round(self._now, 9),
+                                    "action": "inject", "kind": ev.kind,
+                                    "stage": ev.stage}
+        if ev.kind == "replica_kill":
+            alive = self._alive_rids(ev.stage)
+            if not alive or (len(alive) <= 1 and not self.faults.respawn):
+                entry["replica"] = -1        # refused: pool would strand
+            else:
+                rid = alive[ev.replica % len(alive)]
+                self._kill_slot(ev.stage, rid)
+                entry["replica"] = rid
+                if self.faults.respawn:
+                    self._push(self._now + self.faults.respawn_delay_s,
+                               "respawn", ev.stage)
+        elif ev.kind == "replica_stall":
+            alive = self._alive_rids(ev.stage)
+            if not alive:
+                entry["replica"] = -1
+            else:
+                rid = alive[ev.replica % len(alive)]
+                self._slow[(ev.stage, rid)] = max(1.0, ev.factor)
+                entry["replica"] = rid
+                entry["factor"] = ev.factor
+                if ev.duration_s > 0:
+                    self._push(self._now + ev.duration_s, "unstall",
+                               (ev.stage, rid))
+        else:                                # writer_stall
+            self._wstall_until = self._now + ev.duration_s
+            entry["duration_s"] = ev.duration_s
+            self._push(self._wstall_until, "wresume", None)
+        self.fault_log.append(entry)
 
     # -- run -----------------------------------------------------------------
 
@@ -231,6 +386,9 @@ class ScenarioSim:
         self._total = min(len(self.requests), len(self.arrivals))
         if self.controller is not None and self._total:
             self._push(self.interval_s, "tick")
+        if self._total:
+            for fev in self.faults.events:
+                self._push(fev.t_s, "fault", fev)
         t_first = self.arrivals[0] if self._total else 0.0
         t_last_done = t_first
 
@@ -250,8 +408,20 @@ class ScenarioSim:
                     self._wq.append((t, req))
                     self._start_writes()
             elif kind == "done":
-                stage, items = payload
-                self._in_service[stage] -= 1
+                stage, rid = payload
+                if (stage, rid) in self._doomed:
+                    # the slot died mid-batch; its items already requeued
+                    self._doomed.discard((stage, rid))
+                    self._busy_items.pop((stage, rid), None)
+                    continue
+                items = self._busy_items.pop((stage, rid))
+                if self._shrink_pend[stage] > 0:
+                    # scale-down finished its last batch: slot retires
+                    self._shrink_pend[stage] -= 1
+                    self._slow.pop((stage, rid), None)
+                else:
+                    self._free[stage].append(rid)
+                    self._free[stage].sort()
                 si = STAGE_NAMES.index(stage)
                 if si + 1 < len(STAGE_NAMES):
                     nxt = STAGE_NAMES[si + 1]
@@ -276,6 +446,24 @@ class ScenarioSim:
                 t_last_done = max(t_last_done, t)
                 self._writer_busy = False
                 self._start_writes()
+            elif kind == "fault":
+                self._apply_fault(payload)
+            elif kind == "respawn":
+                rid = self._spawn_slot(payload)
+                self.fault_log.append({"t_s": round(t, 9),
+                                       "action": "respawn", "kind":
+                                       "replica_kill", "stage": payload,
+                                       "replica": rid})
+                self._start_batches(payload)
+            elif kind == "unstall":
+                stage, rid = payload
+                if self._slow.pop((stage, rid), None) is not None:
+                    self.fault_log.append({"t_s": round(t, 9),
+                                           "action": "unstall",
+                                           "kind": "replica_stall",
+                                           "stage": stage, "replica": rid})
+            elif kind == "wresume":
+                self._start_writes()
             else:                                    # tick
                 self._tick()
 
@@ -299,4 +487,8 @@ class ScenarioSim:
                          controller=self.controller,
                          wall_s=max(t_last_done - t_first, 1e-9),
                          stage_rows=rows,
-                         write_batches=list(self.write_batches))
+                         write_batches=list(self.write_batches),
+                         failed=sorted(self.failed,
+                                       key=lambda q: q.stream_idx),
+                         fault_log=list(self.fault_log),
+                         n_retried=self.n_retried)

@@ -24,6 +24,7 @@ from typing import Any, Dict
 
 from repro.core.spec import AutoscaleSpec, PipelineSpec, StageSpec
 from repro.serving.arrival import ArrivalConfig
+from repro.serving.faults import FaultSpec
 from repro.workload.generator import WorkloadConfig
 
 
@@ -125,10 +126,11 @@ class ScenarioSpec:
     priority: str = "fifo"          # batcher read/write policy (live runs)
     seed: int = 0
     autoscale: AutoscaleSpec = field(default_factory=AutoscaleSpec)
+    faults: FaultSpec = field(default_factory=FaultSpec)    # chaos block
     pipeline: Dict[str, Any] = field(default_factory=dict)  # spec overrides
 
     _KEYS = ("name", "description", "arrival", "mix", "n_docs", "n_requests",
-             "slo_ms", "priority", "seed", "autoscale", "pipeline")
+             "slo_ms", "priority", "seed", "autoscale", "faults", "pipeline")
 
     def __post_init__(self):
         assert self.name, "a scenario needs a name"
@@ -165,6 +167,7 @@ class ScenarioSpec:
             "n_docs": self.n_docs, "n_requests": self.n_requests,
             "slo_ms": self.slo_ms, "priority": self.priority,
             "seed": self.seed, "autoscale": self.autoscale.to_dict(),
+            "faults": self.faults.to_dict(),
             "pipeline": json.loads(json.dumps(self.pipeline)),
         }
 
@@ -182,6 +185,8 @@ class ScenarioSpec:
             kw["mix"] = MixSpec.from_dict(d["mix"])
         if "autoscale" in d:
             kw["autoscale"] = AutoscaleSpec.from_dict(d["autoscale"])
+        if "faults" in d:
+            kw["faults"] = FaultSpec.from_dict(d["faults"])
         for k in ("description", "priority"):
             if k in d:
                 kw[k] = str(d[k])

@@ -7,7 +7,10 @@ from repro.serving.autoscale import (AutoscaleConfig, AutoscaleController,
                                      ScaleEvent, Snapshot, StageSample,
                                      default_ladder)
 from repro.serving.batcher import BatchPolicy, ContinuousBatcher, Submission
-from repro.serving.elastic import ElasticExecutor, ElasticResult
+from repro.serving.elastic import (ElasticExecutor, ElasticResult,
+                                   ReplicaKilled)
+from repro.serving.faults import (FAULT_KINDS, FaultEvent, FaultInjector,
+                                  FaultSpec)
 from repro.serving.genengine import EngineLLM, GenEngine, GenRequest
 from repro.serving.harness import ServingConfig, ServingHarness, ServingResult
 from repro.serving.staged import StagedExecutor, StagedResult, StageStats
@@ -17,7 +20,8 @@ __all__ = [
     "AutoscaleConfig", "AutoscaleController", "ScaleEvent", "Snapshot",
     "StageSample", "default_ladder",
     "BatchPolicy", "ContinuousBatcher", "Submission",
-    "ElasticExecutor", "ElasticResult",
+    "ElasticExecutor", "ElasticResult", "ReplicaKilled",
+    "FAULT_KINDS", "FaultEvent", "FaultInjector", "FaultSpec",
     "EngineLLM", "GenEngine", "GenRequest",
     "LatencyAccountant", "RequestRecord", "percentile",
     "ServingConfig", "ServingHarness", "ServingResult",

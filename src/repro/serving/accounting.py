@@ -85,9 +85,15 @@ class LatencyAccountant:
             recs = list(self.records)
         done = [r for r in recs if r.ok]
         queries = [r for r in done if r.op == "query"]
+        failed = [r for r in recs if not r.ok]
         out: Dict[str, float] = {
             "n_requests": float(len(done)),
             "n_queries": float(len(queries)),
+            "n_failed": float(len(failed)),
+            # every record is terminal (completed or explicitly failed);
+            # availability is the completed share of that total
+            "error_rate": len(failed) / len(recs) if recs else 0.0,
+            "availability": len(done) / len(recs) if recs else 1.0,
         }
         if not done:
             return out

@@ -97,12 +97,18 @@ class StageSample:
 
 @dataclass
 class Snapshot:
-    """Everything one controller step may look at."""
+    """Everything one controller step may look at.
+
+    ``stragglers`` carries the executor's flagged (stage, rid) pairs inside
+    the snapshot — not read live by ``step`` — so a recorded snapshot
+    sequence still replays to an identical event stream (the determinism
+    contract)."""
 
     t_s: float
     stages: List[StageSample]
     p95_ms: float = 0.0
     n_completed: int = 0
+    stragglers: List[Tuple[str, int]] = field(default_factory=list)
 
 
 @dataclass
@@ -165,6 +171,7 @@ class AutoscaleController:
         self._base_batch: Dict[str, int] = {}
         self._knob_wait = 0
         self._replica_wait: Dict[str, int] = {}
+        self._retired: set = set()         # (stage, rid) already retired
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._t0: Optional[float] = None
@@ -187,7 +194,8 @@ class AutoscaleController:
                   for r in rows]
         return Snapshot(t_s=now - self._t0, stages=stages,
                         p95_ms=self.executor.recent_p95_ms(),
-                        n_completed=self.executor.n_completed)
+                        n_completed=self.executor.n_completed,
+                        stragglers=self.executor.straggler_rids())
 
     def start(self) -> "AutoscaleController":
         """Sample + step on a background thread at the configured cadence."""
@@ -240,10 +248,27 @@ class AutoscaleController:
         if self._knob_wait > 0:
             self._knob_wait -= 1
 
+        out += self._retire_stragglers(snap)
         out += self._scale_replicas(snap, occ)
         out += self._scale_batches(snap, occ)
         out += self._walk_ladder(snap)
         self.events.extend(out)
+        return out
+
+    def _retire_stragglers(self, snap: Snapshot) -> List[ScaleEvent]:
+        """Recovery action: a (stage, rid) flagged in the snapshot is
+        retired — killed and replaced by a fresh replica — exactly once
+        (``_retired`` is controller state, so replay reproduces it)."""
+        out: List[ScaleEvent] = []
+        for stage, rid in snap.stragglers:
+            if (stage, rid) in self._retired:
+                continue
+            self._retired.add((stage, rid))
+            out.append(ScaleEvent(
+                snap.t_s, "retire", stage, rid, -1,
+                f"straggler replica r{rid} flagged; retiring + respawn"))
+            if self.executor is not None:
+                self.executor.retire_replica(stage, rid)
         return out
 
     def _backlog(self, s: StageSample) -> float:

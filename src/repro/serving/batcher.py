@@ -51,6 +51,7 @@ class Submission:
     enqueue_t: float = 0.0        # perf_counter at submit()
     done: threading.Event = field(default_factory=threading.Event)
     error: Optional[BaseException] = None
+    finished: bool = False        # set once by the first _finish (idempotence)
 
 
 class ContinuousBatcher:

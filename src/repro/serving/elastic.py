@@ -25,6 +25,17 @@ completion order is load-dependent; ``run()`` restores submission order and
 produces outputs identical to the lock-step path (scheduling freedom, never
 semantics).  Service mode (``submit``/``submit_mutation`` + ``drain``) backs
 ``ServingHarness`` open/closed-loop serving.
+
+Failure model (the chaos contract): a worker exception fails *that batch's
+items*, not the run — each item is requeued up to ``max_retries`` times,
+then marked failed and surfaced through ``on_done`` with its error, so every
+submitted request reaches a terminal state (completed or explicitly failed).
+Replicas carry stable per-pool ids and a chaos surface (``kill_replica`` /
+``set_replica_slow`` / ``stall_writer`` / ``spawn_replica``); per-replica
+service times feed a ``StragglerDetector`` so a controller can
+``retire_replica`` a flagged slowpoke and re-grow the pool.  Run-wide abort
+is reserved for errors outside stage execution (bookkeeping bugs, failing
+``on_done`` callbacks).
 """
 from __future__ import annotations
 
@@ -38,12 +49,17 @@ from repro.core.interfaces import Chunk
 from repro.core.pipeline import RAGPipeline
 from repro.core.stages import (GenerateStage, RerankStage, RetrieveStage,
                                traces_from_batch)
+from repro.distributed.fault_tolerance import StragglerDetector
 from repro.serving.accounting import percentile
 from repro.serving.staged import (StagedResult, StageStats, _batch_from_items,
                                   _Item, _scatter_to_items)
 from repro.workload.generator import Request
 
 _POLL_S = 0.02     # starved-worker poll; also bounds end-of-stream latency
+
+
+class ReplicaKilled(Exception):
+    """A replica died (injected or retired) while holding a batch."""
 
 
 @dataclass
@@ -54,13 +70,32 @@ class _ElasticItem(_Item):
     t_submit: float = 0.0
     t_start: float = 0.0
     on_done: Optional[Callable[["_ElasticItem"], None]] = None
+    retries: int = 0
+    error: Optional[BaseException] = None
+
+    @property
+    def failed(self) -> bool:
+        return self.error is not None
+
+
+@dataclass
+class _ReplicaCtl:
+    """Per-replica control block (chaos surface + liveness)."""
+
+    rid: int
+    kill: bool = False       # die at the next loop check (requeue any batch)
+    slow: float = 1.0        # service-time multiplier (straggler injection)
 
 
 @dataclass
 class ElasticResult(StagedResult):
-    """StagedResult + the elastic run's write-path accounting."""
+    """StagedResult + the elastic run's write/failure-path accounting."""
 
     write_batches: List[int] = field(default_factory=list)
+    n_failed: int = 0
+    n_retried: int = 0
+    mutations_applied: int = 0
+    mutations_failed: int = 0
 
     @property
     def mean_write_batch(self) -> float:
@@ -85,9 +120,12 @@ class ElasticExecutor:
                  batch_sizes: Optional[Dict[str, int]] = None,
                  default_batch: int = 8, max_replicas: int = 4,
                  queue_capacity: int = 512, coalesce_wait_s: float = 0.005,
-                 mutation_batch: int = 8):
+                 mutation_batch: int = 8, max_retries: int = 2,
+                 straggler_tolerance: float = 0.0,
+                 straggler_window: int = 16):
         assert default_batch >= 1 and queue_capacity >= 1
         assert max_replicas >= 1 and mutation_batch >= 1
+        assert max_retries >= 0
         self.pipeline = pipeline
         self.stages = list(pipeline.stages)
         self.max_replicas = max_replicas
@@ -123,11 +161,29 @@ class ElasticExecutor:
         self._error: Optional[BaseException] = None
         self._threads: List[threading.Thread] = []
         self._started = False
+        # failure isolation / chaos surface
+        self.max_retries = max_retries
+        self._ctl: List[Dict[int, _ReplicaCtl]] = [
+            {} for _ in self.stages]          # alive replicas by rid
+        self._next_rid = [0] * len(self.stages)
+        self.n_failed = 0
+        self.n_retried = 0
+        # per-replica service-time tracking (straggler detection); tolerance
+        # 0 disables flagging but per-replica recording stays cheap and on
+        self.straggler_tolerance = straggler_tolerance
+        self._straggler = [StragglerDetector(window=straggler_window,
+                                             tolerance=straggler_tolerance
+                                             or 2.0,
+                                             min_samples=2)
+                           for _ in self.stages]
         # write path
         self._wq: "queue.Queue[Tuple[Request, Optional[Callable]]]" = \
             queue.Queue(maxsize=queue_capacity)
         self._writer_closed = threading.Event()
+        self._writer_resume_t: Optional[float] = None   # injected stall
         self.write_batches: List[int] = []
+        self.mutations_applied = 0
+        self.mutations_failed = 0
         # completion tracking
         self._done: List[_ElasticItem] = []
         self._next_idx = 0
@@ -208,6 +264,99 @@ class ElasticExecutor:
         self.batch_sizes[stage_name] = bs
         return bs
 
+    # -- chaos surface (fault injection + recovery) -------------------------
+
+    def alive_replicas(self, stage_name: str) -> List[int]:
+        """Sorted rids of the stage's live (not kill-flagged) replicas."""
+        si = self._stage_idx[stage_name]
+        with self._lock:
+            return sorted(r for r, c in self._ctl[si].items() if not c.kill)
+
+    def kill_replica(self, stage_name: str, index: int = 0,
+                     rid: Optional[int] = None,
+                     allow_last: bool = False) -> int:
+        """Deterministically kill one alive replica of a stage pool.
+
+        The victim dies at its next loop check; any batch it holds rides the
+        requeue/fail path (``max_retries`` budget).  Refuses to take the last
+        replica unless ``allow_last`` (a respawn is scheduled) — a permanently
+        empty pool would strand its queue.  Returns the killed rid or -1.
+        """
+        si = self._stage_idx[stage_name]
+        with self._lock:
+            alive = sorted(r for r, c in self._ctl[si].items() if not c.kill)
+            if not alive or (len(alive) <= 1 and not allow_last):
+                return -1
+            victim = rid if rid is not None and rid in self._ctl[si] \
+                else alive[index % len(alive)]
+            self._ctl[si][victim].kill = True
+            self._target[si] = max(1, self._target[si] - 1)
+            self.stats[si].replicas = self._target[si]
+            self._straggler[si].forget(victim)
+        return victim
+
+    def spawn_replica(self, stage_name: str) -> int:
+        """Spawn one fresh replica (chaos respawn / pool re-grow); returns
+        its rid, or -1 when the pool is already at ``max_replicas``."""
+        si = self._stage_idx[stage_name]
+        with self._lock:
+            if self._active[si] >= self.max_replicas:
+                return -1
+        self._warm_pool(si, 1)
+        with self._lock:
+            rid = self._spawn_worker_locked(si)
+            self._target[si] = min(max(self._target[si], self._active[si]),
+                                   self.max_replicas)
+            self.stats[si].replicas = self._target[si]
+        return rid
+
+    def set_replica_slow(self, stage_name: str, factor: float,
+                         index: int = 0, rid: Optional[int] = None) -> int:
+        """Turn one replica into a slow straggler (service time × factor;
+        1.0 restores health).  Returns the affected rid or -1."""
+        si = self._stage_idx[stage_name]
+        with self._lock:
+            alive = sorted(r for r, c in self._ctl[si].items() if not c.kill)
+            if not alive:
+                return -1
+            victim = rid if rid is not None and rid in self._ctl[si] \
+                else alive[index % len(alive)]
+            self._ctl[si][victim].slow = max(1.0, float(factor))
+        return victim
+
+    def stall_writer(self, duration_s: float) -> None:
+        """Freeze the serialized mutation writer for ``duration_s`` —
+        pending mutations back up, then drain on resume."""
+        self._writer_resume_t = time.perf_counter() + max(0.0, duration_s)
+
+    def retire_replica(self, stage_name: str, rid: int) -> int:
+        """Controller-driven recovery: kill a flagged replica and spawn a
+        fresh one in its slot (net pool width unchanged).  Returns the
+        replacement's rid, or -1 when ``rid`` is already gone."""
+        si = self._stage_idx[stage_name]
+        with self._lock:
+            ctl = self._ctl[si].get(rid)
+            if ctl is None or ctl.kill:     # already gone (or going)
+                return -1
+            ctl.kill = True
+            self._straggler[si].forget(rid)
+        self._warm_pool(si, 1)
+        with self._lock:
+            return self._spawn_worker_locked(si)
+
+    def straggler_rids(self) -> List[Tuple[str, int]]:
+        """(stage, rid) pairs whose per-item service time is flagged by the
+        per-stage ``StragglerDetector``; empty when detection is disabled
+        (``straggler_tolerance == 0``)."""
+        if not self.straggler_tolerance:
+            return []
+        out: List[Tuple[str, int]] = []
+        with self._lock:
+            for si, stage in enumerate(self.stages):
+                for rid in self._straggler[si].stragglers():
+                    out.append((stage.name, int(rid)))
+        return out
+
     # -- monitor integration ------------------------------------------------
 
     def gauges(self) -> Dict[str, Callable[[], float]]:
@@ -264,13 +413,17 @@ class ElasticExecutor:
             self._threads.append(t)
         return self
 
-    def _spawn_worker_locked(self, si: int) -> None:
+    def _spawn_worker_locked(self, si: int) -> int:
+        rid = self._next_rid[si]
+        self._next_rid[si] += 1
+        self._ctl[si][rid] = _ReplicaCtl(rid=rid)
         self._active[si] += 1
         t = threading.Thread(
-            target=self._worker, args=(si,),
-            name=f"ragperf-elastic-{self.stages[si].name}-{self._active[si]}")
+            target=self._worker, args=(si, rid),
+            name=f"ragperf-elastic-{self.stages[si].name}-r{rid}")
         t.start()
         self._threads.append(t)
+        return rid
 
     # -- per-replica stage instances ----------------------------------------
 
@@ -307,23 +460,51 @@ class ElasticExecutor:
 
     def drain(self) -> None:
         """Wait until every in-flight request has completed (or the run
-        aborted), then re-raise the first worker error if any."""
+        aborted), then re-raise the first run-level error if any."""
         self.close_intake()
         while True:
+            self._propagate_closure()
             with self._lock:
                 threads = list(self._threads)
-            for t in threads:
-                t.join()
+            pending = [t for t in threads if t.is_alive()]
+            for t in pending:
+                t.join(timeout=_POLL_S)
             with self._lock:
                 # a controller may have spawned workers mid-join; loop until
                 # the thread set is stable and fully joined
-                if len(self._threads) == len(threads):
-                    break
+                stable = len(self._threads) == len(threads)
+            if stable and not any(t.is_alive() for t in threads):
+                break
         if self._error is not None:
             raise self._error
 
+    def _propagate_closure(self) -> None:
+        """Drain-time safety net: a closed stage whose pool emptied (chaos
+        kill without respawn) will never serve its queue again — fail any
+        stranded items and propagate closure so the run still terminates
+        with every request in a terminal state."""
+        with self._lock:
+            active = list(self._active)
+        for si, stage in enumerate(self.stages):
+            if not self._closed[si].is_set() or active[si] > 0:
+                continue
+            while True:
+                try:
+                    it = self.queues[si].get_nowait()
+                except queue.Empty:
+                    break
+                it.error = it.error or ReplicaKilled(
+                    f"stage {stage.name} has no replicas left")
+                self._put_abortable(self.queues[-1], it)
+            self._closed[si + 1].set()
+
     def aborted(self) -> bool:
         return self._abort.is_set()
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        """First run-level error (None while healthy)."""
+        return self._error
 
     # -- submission ---------------------------------------------------------
 
@@ -339,7 +520,18 @@ class ElasticExecutor:
                             ground_truth=ground_truth,
                             gold=list(gold or []),
                             t_submit=time.perf_counter(), on_done=on_done)
-        self._put_abortable(self.queues[0], item)
+        if not self._put_abortable(self.queues[0], item):
+            # aborted executor: never silently drop — the caller must still
+            # see a terminal state for this request
+            item.error = self._error or RuntimeError(
+                "ElasticExecutor aborted; request rejected")
+            with self._lock:
+                self.n_failed += 1
+            if on_done is not None:
+                on_done(item)
+                return item
+            raise RuntimeError(
+                "submit() on an aborted executor") from item.error
         return item
 
     def submit_mutation(self, req: Request,
@@ -347,7 +539,16 @@ class ElasticExecutor:
                             [Optional[BaseException]], None]] = None) -> None:
         """Enqueue an index mutation onto the serialized writer path."""
         assert req.op in ("insert", "update", "removal"), req.op
-        self._put_abortable(self._wq, (req, on_done))
+        if not self._put_abortable(self._wq, (req, on_done)):
+            err = self._error or RuntimeError(
+                "ElasticExecutor aborted; mutation rejected")
+            with self._lock:
+                self.mutations_failed += 1
+            if on_done is not None:
+                on_done(err)
+                return
+            raise RuntimeError(
+                "submit_mutation() on an aborted executor") from err
 
     def trace_for(self, item: _ElasticItem):
         """Per-request §3.3.2 trace for a completed item (service mode)."""
@@ -362,13 +563,51 @@ class ElasticExecutor:
                 self._error = err
         self._abort.set()
 
-    def _put_abortable(self, q: queue.Queue, obj) -> None:
+    def _put_abortable(self, q: queue.Queue, obj) -> bool:
+        """Blocking put that gives up on abort; False means *not enqueued*
+        (the caller owns the object's terminal state).  The abort check
+        comes first: an aborted executor's pools are dead, so enqueueing
+        anything — even with queue room — would strand it forever."""
         while True:
+            if self._abort.is_set():
+                return False
             try:
-                return q.put(obj, timeout=_POLL_S)
+                q.put(obj, timeout=_POLL_S)
+                return True
             except queue.Full:
-                if self._abort.is_set():
-                    return
+                pass
+
+    def _requeue_or_fail(self, si: int, stats: StageStats,
+                         items: List[_ElasticItem],
+                         err: BaseException) -> None:
+        """Worker-exception isolation: the failed batch's items retry
+        (bounded ``max_retries`` budget) or fail terminally through the
+        collector — never a run-wide abort."""
+        for it in items:
+            it.retries += 1
+            if it.retries > self.max_retries:
+                it.error = err
+                with self._lock:
+                    stats.n_failures += 1
+                self._put_abortable(self.queues[-1], it)
+            else:
+                with self._lock:
+                    self.n_retried += 1
+                self._put_abortable(self.queues[si], it)
+
+    def _killed(self, si: int, rid: int) -> bool:
+        with self._lock:
+            ctl = self._ctl[si].get(rid)
+            return ctl is None or ctl.kill
+
+    def _slow_factor(self, si: int, rid: int) -> float:
+        with self._lock:
+            ctl = self._ctl[si].get(rid)
+            return ctl.slow if ctl is not None else 1.0
+
+    def _unregister(self, si: int, rid: int) -> None:
+        with self._lock:
+            self._ctl[si].pop(rid, None)
 
     # -- stage workers ------------------------------------------------------
 
@@ -389,7 +628,7 @@ class ElasticExecutor:
         if last and (self._closed[si].is_set() or self._abort.is_set()):
             self._closed[si + 1].set()
 
-    def _worker(self, si: int) -> None:
+    def _worker(self, si: int, rid: int) -> None:
         # each worker runs its own stage instance (per-replica generation
         # engines); returned to the pool on any exit path for reuse
         stage, stats = self._checkout_stage(si), self.stats[si]
@@ -398,8 +637,12 @@ class ElasticExecutor:
             while not self._abort.is_set():
                 if self._take_shrink(si):
                     self._return_stage(si, stage)
+                    self._unregister(si, rid)
                     return            # retired by scale-down, not stream end
-                stats.observe_depth(in_q.qsize())
+                if self._killed(si, rid):
+                    break             # chaos kill/retire; _retire accounts
+                with self._lock:
+                    stats.observe_depth(in_q.qsize())
                 t_wait = time.perf_counter()
                 try:
                     first = in_q.get(timeout=_POLL_S)
@@ -426,26 +669,45 @@ class ElasticExecutor:
                             items.append(in_q.get_nowait())
                     except queue.Empty:
                         break
-                self._run_batch(si, stage, stats, items, out_q)
+                if self._killed(si, rid):
+                    # died holding a claimed batch: the items ride the
+                    # requeue/fail path, exactly like a worker exception
+                    self._requeue_or_fail(si, stats, items, ReplicaKilled(
+                        f"{stage.name} replica {rid} killed mid-batch"))
+                    break
+                self._run_batch(si, rid, stage, stats, items, out_q)
         except BaseException as e:                   # noqa: BLE001
             self._fail(e)
         self._return_stage(si, stage)
+        self._unregister(si, rid)
         self._retire(si)
 
-    def _run_batch(self, si: int, stage, stats: StageStats,
+    def _run_batch(self, si: int, rid: int, stage, stats: StageStats,
                    items: List[_ElasticItem], out_q: queue.Queue) -> None:
         qb = _batch_from_items(items)
         t0 = time.perf_counter()
         if si == 0:
             for it in items:
                 it.t_start = t0
-        qb = stage.run(qb)
+        try:
+            qb = stage.run(qb)
+        except Exception as e:                       # noqa: BLE001
+            with self._lock:
+                stats.busy_s += time.perf_counter() - t0
+                stats.n_batches += 1
+            self._requeue_or_fail(si, stats, items, e)
+            return
         dt = time.perf_counter() - t0
+        slow = self._slow_factor(si, rid)
+        if slow > 1.0:
+            time.sleep(dt * (slow - 1.0))   # injected straggler drag
+            dt *= slow
         _scatter_to_items(qb, items)
         with self._lock:
             stats.busy_s += dt
             stats.n_batches += 1
             stats.n_items += len(items)
+            self._straggler[si].record(rid, dt / max(len(items), 1))
         t1 = time.perf_counter()
         for it in items:
             self._put_abortable(out_q, it)
@@ -467,10 +729,15 @@ class ElasticExecutor:
             lat_ms = (time.perf_counter() - item.t_submit) * 1e3
             with self._lock:
                 self._done.append(item)
-                self.n_completed += 1
-                self._recent_ms.append(lat_ms)
-                if len(self._recent_ms) > self._recent_cap:
-                    del self._recent_ms[: -self._recent_cap]
+                if item.failed:
+                    # terminal failure: accounted, surfaced via on_done, but
+                    # kept out of the latency window (no service happened)
+                    self.n_failed += 1
+                else:
+                    self.n_completed += 1
+                    self._recent_ms.append(lat_ms)
+                    if len(self._recent_ms) > self._recent_cap:
+                        del self._recent_ms[: -self._recent_cap]
             if item.on_done is not None:
                 try:
                     item.on_done(item)
@@ -479,71 +746,121 @@ class ElasticExecutor:
 
     # -- serialized writer --------------------------------------------------
 
-    def _writer_loop(self) -> None:
+    def _wait_writer_stall(self) -> bool:
+        """Sleep out an injected writer stall; False means abort observed."""
         while True:
-            try:
-                first = self._wq.get(timeout=_POLL_S)
-            except queue.Empty:
-                if self._abort.is_set() or (self._writer_closed.is_set()
-                                            and self._wq.empty()):
-                    return
-                continue
-            batch = [first]
-            while len(batch) < self.mutation_batch:
-                try:
-                    batch.append(self._wq.get_nowait())
-                except queue.Empty:
-                    break
-            err: Optional[BaseException] = None
-            try:
-                self._apply_mutations([req for req, _ in batch])
-            except Exception as e:                   # noqa: BLE001
-                # a failed write batch fails its requests, not the pipeline
-                err = e
-            self.write_batches.append(len(batch))
-            for _, cb in batch:
-                if cb is not None:
-                    cb(err)
+            resume = self._writer_resume_t
+            if resume is None:
+                return True
+            left = resume - time.perf_counter()
+            if left <= 0:
+                self._writer_resume_t = None
+                return True
+            if self._abort.is_set():
+                return False
+            time.sleep(min(left, _POLL_S))
 
-    def _apply_mutations(self, reqs: List[Request]) -> None:
-        """Batched mutation application: one chunking pass + one embedder
-        call for every pending insert/update, then per-request application
-        **in arrival order** under the DB's mutation lock — a batch holding
+    def _writer_loop(self) -> None:
+        try:
+            while True:
+                # injected writer stall: mutations back up while frozen,
+                # then the backlog drains on resume (stay abort-aware)
+                if not self._wait_writer_stall():
+                    return
+                try:
+                    first = self._wq.get(timeout=_POLL_S)
+                except queue.Empty:
+                    if self._abort.is_set() or (self._writer_closed.is_set()
+                                                and self._wq.empty()):
+                        return
+                    continue
+                batch = [first]
+                while len(batch) < self.mutation_batch:
+                    try:
+                        batch.append(self._wq.get_nowait())
+                    except queue.Empty:
+                        break
+                # a stall injected while we blocked on get() must freeze
+                # the already-coalesced batch too, not just the next one
+                if not self._wait_writer_stall():
+                    return
+                errs = self._apply_mutations([req for req, _ in batch])
+                self.write_batches.append(len(batch))
+                with self._lock:
+                    self.mutations_applied += \
+                        sum(1 for e in errs if e is None)
+                    self.mutations_failed += \
+                        sum(1 for e in errs if e is not None)
+                for (_, cb), err in zip(batch, errs):
+                    if cb is not None:
+                        cb(err)
+        except BaseException as e:                   # noqa: BLE001
+            self._fail(e)
+
+    def _apply_mutations(self, reqs: List[Request]
+                         ) -> List[Optional[BaseException]]:
+        """Batched mutation application with **per-request** attribution:
+        one chunking pass + one embedder call for every pending
+        insert/update, then per-request application **in arrival order**
+        under the DB's mutation lock — a batch holding
         [insert(d), removal(d)] must leave d absent, exactly as the
-        sequential stream would."""
+        sequential stream would.  Returns one error slot per request: a
+        failure applying request *k* never claims requests already applied
+        before it, and later requests still get their turn."""
         pipe = self.pipeline
-        upserts = [r for r in reqs if r.op in ("insert", "update")]
+        errs: List[Optional[BaseException]] = [None] * len(reqs)
+        upserts: List[Request] = []
         per_doc: Dict[int, List[Chunk]] = {}
         with pipe.timer.stage("chunking"):
-            for r in upserts:
-                version = r.version or (1 if r.op == "update" else 0)
-                per_doc[id(r)] = [Chunk(-1, r.doc_id, piece, s, e,
-                                        version=version)
-                                  for s, e, piece in pipe.chunker.chunk(r.text)]
+            for i, r in enumerate(reqs):
+                if r.op not in ("insert", "update"):
+                    continue
+                try:
+                    version = r.version or (1 if r.op == "update" else 0)
+                    per_doc[id(r)] = [
+                        Chunk(-1, r.doc_id, piece, s, e, version=version)
+                        for s, e, piece in pipe.chunker.chunk(r.text)]
+                    upserts.append(r)
+                except Exception as e:               # noqa: BLE001
+                    errs[i] = e
         flat = [c for chunks in per_doc.values() for c in chunks]
+        vecs, embed_err = None, None
         if flat:
-            with pipe.timer.stage("embedding"):
-                vecs = pipe.embedder.embed([c.text for c in flat])
+            try:
+                with pipe.timer.stage("embedding"):
+                    vecs = pipe.embedder.embed([c.text for c in flat])
+            except Exception as e:                   # noqa: BLE001
+                # the batched embed is shared; its failure claims every
+                # upsert in the batch, but removals still proceed
+                embed_err = e
         offsets: Dict[int, int] = {}
         ofs = 0
         for r in upserts:
             offsets[id(r)] = ofs
             ofs += len(per_doc[id(r)])
-        for r in reqs:
-            if r.op == "removal":
-                pipe.remove_document(r.doc_id)
+        for i, r in enumerate(reqs):
+            if errs[i] is not None:
                 continue
-            chunks = per_doc[id(r)]
-            if not chunks:
-                if r.op == "update":        # empty replacement == removal
+            try:
+                if r.op == "removal":
                     pipe.remove_document(r.doc_id)
-                continue
-            sub = vecs[offsets[id(r)]:offsets[id(r)] + len(chunks)]
-            with pipe.timer.stage("insertion"):
-                if r.op == "update":
-                    pipe.db.update(r.doc_id, sub, chunks)
-                else:
-                    pipe.db.insert(sub, chunks)
+                    continue
+                chunks = per_doc[id(r)]
+                if not chunks:
+                    if r.op == "update":    # empty replacement == removal
+                        pipe.remove_document(r.doc_id)
+                    continue
+                if embed_err is not None:
+                    raise embed_err
+                sub = vecs[offsets[id(r)]:offsets[id(r)] + len(chunks)]
+                with pipe.timer.stage("insertion"):
+                    if r.op == "update":
+                        pipe.db.update(r.doc_id, sub, chunks)
+                    else:
+                        pipe.db.insert(sub, chunks)
+            except Exception as e:                   # noqa: BLE001
+                errs[i] = e
+        return errs
 
     # -- batch drive (StagedExecutor-compatible) ----------------------------
 
@@ -567,6 +884,12 @@ class ElasticExecutor:
         wall = time.perf_counter() - t0
         done = sorted(self._done, key=lambda it: it.idx)
         assert len(done) == n, f"lost items: {len(done)} != {n}"
+        failed = [it for it in done if it.failed]
+        if failed:
+            # batch mode has no per-request error channel: surface the first
+            # terminal failure (service-mode callers get per-item errors
+            # through on_done instead)
+            raise failed[0].error
         traces = traces_from_batch(
             _batch_from_items(done),
             latency_s=[dict(it.latency_s) for it in done])
@@ -574,4 +897,8 @@ class ElasticExecutor:
         return ElasticResult(traces=traces, wall_s=wall,
                              throughput_qps=n / wall if wall > 0 else 0.0,
                              stage_stats=list(self.stats),
-                             write_batches=list(self.write_batches))
+                             write_batches=list(self.write_batches),
+                             n_failed=self.n_failed,
+                             n_retried=self.n_retried,
+                             mutations_applied=self.mutations_applied,
+                             mutations_failed=self.mutations_failed)

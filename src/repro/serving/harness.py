@@ -117,6 +117,13 @@ class ServingHarness:
 
     def _finish(self, sub: Submission, ok: bool,
                 err: Optional[BaseException] = None) -> None:
+        # idempotent: the abort watchdog / _drain_elastic failing leftovers
+        # can race a concurrent on_done completion — first caller wins, the
+        # loser must not double-decrement _in_flight or double-record
+        with self._if_lock:
+            if sub.finished:
+                return
+            sub.finished = True
         sub.record.end_s = time.perf_counter()
         if sub.record.start_s == 0.0:
             sub.record.start_s = sub.record.end_s
@@ -135,6 +142,11 @@ class ServingHarness:
         replica pools, mutations through the serialized writer."""
         if req.op == "query":
             def on_done(item, sub=sub, req=req):
+                if item.failed:
+                    # terminal failure after the retry budget: surfaced, not
+                    # dropped — the record carries the error
+                    self._finish(sub, ok=False, err=item.error)
+                    return
                 sub.record.start_s = item.t_start
                 sub.record.stages = dict(item.latency_s)
                 if self.scfg.evaluate:
@@ -215,8 +227,17 @@ class ServingHarness:
         acfg = self.scfg.arrival
         requests = self._materialize()
         executor: Optional[threading.Thread] = None
+        watchdog: Optional[threading.Thread] = None
+        stop_watch = threading.Event()
         if self.executor is not None:
             self.executor.start()
+            # closed-loop clients park on sub.done; if the backend aborts
+            # mid-run nothing would ever complete them — the watchdog fails
+            # outstanding submissions the moment abort is observed
+            watchdog = threading.Thread(target=self._abort_watchdog,
+                                        args=(stop_watch,),
+                                        name="ragperf-serving-watchdog")
+            watchdog.start()
         else:
             executor = threading.Thread(target=self._executor_loop,
                                         name="ragperf-serving-executor")
@@ -230,7 +251,11 @@ class ServingHarness:
                 self._drive_closed(requests)
         finally:
             if self.executor is not None:
-                self._drain_elastic()
+                try:
+                    self._drain_elastic()
+                finally:
+                    stop_watch.set()
+                    watchdog.join()
             else:
                 self.batcher.close()
                 executor.join()
@@ -264,6 +289,19 @@ class ServingHarness:
                              peak_queue_depth=peak_depth,
                              quality=quality)
 
+    def _abort_watchdog(self, stop: threading.Event) -> None:
+        while not stop.wait(0.02):
+            if self.executor.aborted():
+                self._fail_outstanding(self.executor.error
+                                       or RuntimeError("executor aborted"))
+                return
+
+    def _fail_outstanding(self, err: Optional[BaseException]) -> None:
+        with self._if_lock:
+            leftovers = list(self._outstanding.values())
+        for sub in leftovers:
+            self._finish(sub, ok=False, err=err)
+
     def _drain_elastic(self) -> None:
         """Wait out the elastic executor; if it aborted, fail whatever is
         still outstanding so closed-loop clients and callers never hang."""
@@ -272,10 +310,7 @@ class ServingHarness:
             self.executor.drain()
         except BaseException as e:                    # noqa: BLE001
             err = e
-        with self._if_lock:
-            leftovers = list(self._outstanding.values())
-        for sub in leftovers:
-            self._finish(sub, ok=False, err=err)
+        self._fail_outstanding(err)
         if err is not None:
             raise err
 

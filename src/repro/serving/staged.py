@@ -71,6 +71,7 @@ class StageStats:
     n_items: int = 0
     queue_depth_max: int = 0   # deepest inbound queue seen at a pull
     replicas: int = 1          # workers serving this stage (elastic pools)
+    n_failures: int = 0        # items terminally failed at this stage
 
     @property
     def occupancy(self) -> float:
@@ -89,6 +90,7 @@ class StageStats:
             "n_batches": float(self.n_batches), "n_items": float(self.n_items),
             "queue_depth_max": float(self.queue_depth_max),
             "replicas": float(self.replicas),
+            "failures": float(self.n_failures),
             "mean_batch": self.n_items / self.n_batches if self.n_batches
             else 0.0,
         }

@@ -91,6 +91,16 @@ def test_heartbeats_detect_dead_hosts():
     assert hb.alive(now) == 3
 
 
+def test_heartbeats_startup_grace_for_never_stamped_hosts():
+    """A freshly-launched fleet must not read as all-dead at t=0: hosts
+    that never stamped are dead only once the startup grace elapses."""
+    hb = HeartbeatTracker(n_hosts=2, timeout_s=10.0, grace_s=5.0)
+    assert hb.dead_hosts(hb.t_start + 1.0) == []          # inside grace
+    assert hb.dead_hosts(hb.t_start + 6.0) == [0, 1]      # grace expired
+    hb.stamp(0, step=0, t=hb.t_start + 6.0)
+    assert hb.dead_hosts(hb.t_start + 7.0) == [1]
+
+
 def test_straggler_detection():
     sd = StragglerDetector(tolerance=2.0)
     for step in range(20):

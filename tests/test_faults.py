@@ -1,0 +1,396 @@
+"""Chaos layer: fault-spec round-trips, worker-exception isolation and the
+retry budget, the live chaos surface (kill/respawn/stall), hardened abort
+paths (no silent drops, no hung closed-loop clients, idempotent finish),
+per-request writer attribution, and the deterministic sim fault model."""
+import threading
+import time
+
+import pytest
+
+from repro.core.stages import QueryBatch
+from repro.scenarios import ScenarioRunner, golden_dict, golden_variant
+from repro.serving.arrival import ArrivalConfig
+from repro.serving.batcher import BatchPolicy
+from repro.serving.elastic import ElasticExecutor, ReplicaKilled
+from repro.serving.faults import FaultEvent, FaultSpec
+from repro.serving.harness import ServingConfig, ServingHarness
+from repro.workload.generator import Request, WorkloadConfig
+
+from test_elastic import make_rig
+
+POISON = "zz-poison-marker"
+
+
+def _service(ex, questions, timeout=20.0):
+    """Drive questions through a started executor in service mode; returns
+    the items once every one reached a terminal state (done or failed)."""
+    done = threading.Event()
+    items = []
+
+    def on_done(item):
+        items.append(item)
+        if len(items) == len(questions):
+            done.set()
+
+    for q in questions:
+        ex.submit(q, on_done=on_done)
+    assert done.wait(timeout), \
+        f"only {len(items)}/{len(questions)} requests reached terminal state"
+    return items
+
+
+# -- spec ---------------------------------------------------------------------
+
+
+def test_fault_spec_roundtrip_and_validation():
+    spec = FaultSpec(events=[
+        FaultEvent(t_s=0.5, kind="replica_kill", stage="retrieval"),
+        FaultEvent(t_s=0.7, kind="replica_stall", stage="generation",
+                   factor=6.0, duration_s=1.0),
+        FaultEvent(t_s=1.0, kind="writer_stall", duration_s=0.5),
+    ], max_retries=3, detect=True)
+    assert FaultSpec.from_dict(spec.to_dict()) == spec
+    assert spec.enabled and not FaultSpec().enabled
+    with pytest.raises(AssertionError):
+        FaultEvent(t_s=0.1, kind="disk_on_fire")
+    with pytest.raises(AssertionError):
+        FaultEvent(t_s=0.1, kind="replica_kill")      # needs a stage
+    with pytest.raises(ValueError):
+        FaultSpec.from_dict({"bogus": 1})
+    with pytest.raises(AssertionError):
+        FaultSpec(straggler_tolerance=1.0)   # <=1 can never flag anything
+
+
+# -- failure isolation + retry budget ----------------------------------------
+
+
+def test_worker_exception_fails_only_its_items():
+    """A stage exception fails that batch's requests via on_done — the run
+    does not abort and every other request still completes."""
+    pipe, _, qs, _, _ = make_rig(n_docs=12, seed=3)
+    pipe.traces.clear()
+    ex = ElasticExecutor(pipe, default_batch=1, max_retries=1,
+                         coalesce_wait_s=0.0).start()
+    original = ex.stages[1]._apply
+
+    def poisoned(batch: QueryBatch):
+        if any(POISON in q for q in batch.questions):
+            raise RuntimeError("poisoned retrieval batch")
+        return original(batch)
+
+    ex.stages[1]._apply = poisoned
+    try:
+        stream = qs[:6] + [f"{POISON} what?"] + qs[6:9]
+        items = _service(ex, stream)
+        ex.drain()
+    finally:
+        ex.stages[1]._apply = original
+        pipe.traces.clear()
+    bad = [it for it in items if it.failed]
+    good = [it for it in items if not it.failed]
+    assert len(bad) == 1 and POISON in bad[0].question
+    assert isinstance(bad[0].error, RuntimeError)
+    assert bad[0].retries == 2                    # budget spent before fail
+    assert len(good) == 9 and all(it.answer is not None for it in good)
+    assert not ex.aborted()
+    # one requeue (the budget), then the second strike was terminal
+    assert ex.n_failed == 1 and ex.n_retried == 1
+
+
+def test_retry_budget_zero_fails_first_strike():
+    pipe, _, qs, ans, golds = make_rig(n_docs=8, seed=5)
+    pipe.traces.clear()
+    ex = ElasticExecutor(pipe, default_batch=4, max_retries=0)
+    original = ex.stages[3]._apply
+    ex.stages[3]._apply = lambda b: (_ for _ in ()).throw(
+        ReplicaKilled("generation gone"))
+    try:
+        with pytest.raises(ReplicaKilled):
+            ex.run(qs[:8], ground_truth=ans[:8], gold_chunks=golds[:8])
+    finally:
+        ex.stages[3]._apply = original
+        pipe.traces.clear()
+    assert ex.n_retried == 0 and ex.n_failed == 8
+
+
+# -- live chaos surface -------------------------------------------------------
+
+
+def test_kill_respawn_and_last_replica_guard():
+    pipe, _, qs, _, _ = make_rig(n_docs=12, seed=7)
+    pipe.traces.clear()
+    ex = ElasticExecutor(pipe, replicas={"retrieval": 2},
+                         default_batch=2).start()
+    try:
+        assert ex.alive_replicas("retrieval") == [0, 1]
+        assert ex.kill_replica("retrieval") == 0
+        assert ex.alive_replicas("retrieval") == [1]
+        # the last replica is refused unless a respawn is coming
+        assert ex.kill_replica("retrieval") == -1
+        assert ex.spawn_replica("retrieval") == 2     # fresh monotonic rid
+        assert ex.alive_replicas("retrieval") == [1, 2]
+        items = _service(ex, qs[:10])
+        assert all(not it.failed for it in items)
+    finally:
+        ex.drain()
+        pipe.traces.clear()
+
+
+def test_retire_replica_swaps_in_fresh_worker():
+    pipe, _, qs, _, _ = make_rig(n_docs=10, seed=11)
+    pipe.traces.clear()
+    ex = ElasticExecutor(pipe, replicas={"retrieval": 2}, default_batch=2,
+                         straggler_tolerance=1.5, straggler_window=8).start()
+    try:
+        before = ex.replicas_of("retrieval")
+        new_rid = ex.retire_replica("retrieval", 0)
+        assert new_rid == 2
+        assert ex.retire_replica("retrieval", 0) == -1    # already gone
+        assert ex.alive_replicas("retrieval") == [1, 2]
+        assert ex.replicas_of("retrieval") == before      # width unchanged
+        items = _service(ex, qs[:8])
+        assert all(not it.failed for it in items)
+    finally:
+        ex.drain()
+        pipe.traces.clear()
+
+
+def test_slow_replica_flagged_as_straggler():
+    """A 6x-slowed replica must show up in straggler_rids() — the live
+    half of the detection loop the controller's retire path consumes.
+    Three replicas so the fleet quantile is a healthy median (wide flagging
+    margin) and the straggler still pulls enough items to clear
+    min_samples while racing two fast peers."""
+    pipe, _, qs, _, _ = make_rig(n_docs=16, seed=13)
+    # warm the jit caches: a 50ms first-call compile × slow-factor would
+    # otherwise park the straggler on item one while the healthy replicas
+    # drain the whole stream, leaving it under the detector's min_samples
+    pipe.query(["warmup"])
+    pipe.traces.clear()
+    ex = ElasticExecutor(pipe, replicas={"retrieval": 3}, default_batch=1,
+                         coalesce_wait_s=0.0,
+                         straggler_tolerance=1.5,
+                         straggler_window=8).start()
+    try:
+        victim = ex.set_replica_slow("retrieval", 6.0)
+        assert victim == 0
+        _service(ex, [f"q{i} {q}" for i, q in enumerate(qs * 4)])
+        assert ("retrieval", victim) in ex.straggler_rids()
+    finally:
+        ex.drain()
+        pipe.traces.clear()
+
+
+# -- hardened abort paths -----------------------------------------------------
+
+
+def test_submit_after_abort_is_loud_not_silent():
+    """Satellite regression: post-abort submissions must reach a terminal
+    state (on_done with error, or raise) — never a silent drop."""
+    pipe, _, qs, _, _ = make_rig(n_docs=8, seed=17)
+    pipe.traces.clear()
+    ex = ElasticExecutor(pipe, default_batch=4).start()
+    ex._fail(RuntimeError("backend exploded"))
+    failed = []
+    item = ex.submit(qs[0], on_done=failed.append)
+    assert failed == [item] and item.failed
+    assert "exploded" in str(item.error)
+    with pytest.raises(RuntimeError, match="aborted"):
+        ex.submit(qs[1])
+    errs = []
+    ex.submit_mutation(Request(op="removal", step=0, doc_id=1),
+                       on_done=errs.append)
+    assert len(errs) == 1 and "exploded" in str(errs[0])
+    with pytest.raises(RuntimeError, match="aborted"):
+        ex.submit_mutation(Request(op="removal", step=1, doc_id=2))
+    with pytest.raises(RuntimeError, match="exploded"):
+        ex.drain()
+    pipe.traces.clear()
+
+
+def test_closed_loop_abort_raises_instead_of_hanging():
+    """Satellite regression: a mid-run executor abort used to leave
+    closed-loop clients parked on sub.done.wait() forever; the watchdog now
+    fails outstanding submissions and run() raises."""
+    pipe, corpus, _, _, _ = make_rig(n_docs=10, seed=19)
+    pipe.traces.clear()
+    wcfg = WorkloadConfig(query_frac=0.5, update_frac=0.5, n_requests=20,
+                          seed=19)
+    scfg = ServingConfig(
+        arrival=ArrivalConfig(mode="closed", concurrency=4, n_requests=20,
+                              seed=19),
+        policy=BatchPolicy(max_batch=4, max_wait_s=0.005), slo_ms=500.0)
+    ex = ElasticExecutor(pipe, default_batch=4)
+    # poison the *writer* (not a stage): stage failures are isolated now,
+    # but a writer-loop failure is run-level and must abort loudly
+    ex._apply_mutations = lambda reqs: (_ for _ in ()).throw(
+        RuntimeError("writer wedged"))
+    h = ServingHarness(pipe, corpus, wcfg, scfg, executor=ex)
+    outcome = {}
+
+    def drive():
+        try:
+            h.run()
+            outcome["raised"] = None
+        except RuntimeError as e:
+            outcome["raised"] = e
+
+    t = threading.Thread(target=drive)
+    t.start()
+    t.join(timeout=30.0)
+    assert not t.is_alive(), "closed-loop run() hung on executor abort"
+    assert outcome["raised"] is not None
+    assert "writer wedged" in str(outcome["raised"])
+    pipe.traces.clear()
+
+
+def test_finish_is_idempotent_under_races():
+    """Satellite regression: watchdog/drain failing leftovers can race a
+    concurrent on_done — the second _finish must be a no-op."""
+    pipe, corpus, _, _, _ = make_rig(n_docs=8, seed=23)
+    wcfg = WorkloadConfig(query_frac=1.0, update_frac=0.0, n_requests=4,
+                          seed=23)
+    scfg = ServingConfig(
+        arrival=ArrivalConfig(mode="open", target_qps=100.0, n_requests=4,
+                              seed=23),
+        policy=BatchPolicy(max_batch=4, max_wait_s=0.005), slo_ms=500.0)
+    h = ServingHarness(pipe, corpus, wcfg, scfg,
+                       executor=ElasticExecutor(pipe, default_batch=4))
+    sub = h._submit(Request(op="query", step=0, question="q", answer="a"))
+    h._finish(sub, ok=True)
+    h._finish(sub, ok=False, err=RuntimeError("late loser"))
+    assert len(h.accountant.records) == 1
+    assert h.accountant.records[0].ok           # first caller won
+    assert h._in_flight == 0                    # no double decrement
+    pipe.traces.clear()
+
+
+# -- writer: stall + per-request attribution ---------------------------------
+
+
+def test_writer_stall_backs_up_then_drains():
+    pipe, corpus, _, _, _ = make_rig(n_docs=8, seed=29)
+    ex = ElasticExecutor(pipe, default_batch=4, mutation_batch=4).start()
+    stall_s = 0.4
+    ex.stall_writer(stall_s)
+    t0 = time.perf_counter()
+    done = threading.Event()
+    errs = []
+
+    def cb(err):
+        errs.append(err)
+        if len(errs) == 3:
+            done.set()
+
+    for i in range(3):
+        ex.submit_mutation(
+            Request(op="insert", step=i, doc_id=900 + i,
+                    text=f"the size of part{i} is {i} cm."), on_done=cb)
+    assert done.wait(timeout=15.0)
+    assert time.perf_counter() - t0 >= stall_s * 0.8    # it actually stalled
+    assert errs == [None, None, None]
+    assert ex.mutations_applied == 3 and ex.mutations_failed == 0
+    ex.drain()
+    assert 902 in pipe.db.doc_slots
+
+
+def test_writer_failure_attributed_per_request():
+    """Satellite regression: one bad mutation in a coalesced batch fails
+    only its own callback — neighbors still apply and are counted."""
+    pipe, corpus, _, _, _ = make_rig(n_docs=8, seed=31)
+    ex = ElasticExecutor(pipe, default_batch=4)
+    original = pipe.remove_document
+
+    def bad_removal(doc_id):
+        raise KeyError(f"doc {doc_id} held by a cosmic ray")
+
+    pipe.remove_document = bad_removal
+    try:
+        errs = ex._apply_mutations([
+            Request(op="insert", step=0, doc_id=700,
+                    text="the mass of rock is 7 kg."),
+            Request(op="removal", step=1, doc_id=3),
+            Request(op="insert", step=2, doc_id=701,
+                    text="the mass of stone is 8 kg."),
+        ])
+    finally:
+        pipe.remove_document = original
+    assert errs[0] is None and errs[2] is None
+    assert isinstance(errs[1], KeyError)
+    assert 700 in pipe.db.doc_slots and 701 in pipe.db.doc_slots
+
+
+def test_writer_embed_failure_spares_removals():
+    pipe, corpus, _, _, _ = make_rig(n_docs=8, seed=37)
+    ex = ElasticExecutor(pipe, default_batch=4)
+    original = pipe.embedder.embed
+    pipe.embedder.embed = lambda texts: (_ for _ in ()).throw(
+        RuntimeError("embedder OOM"))
+    try:
+        errs = ex._apply_mutations([
+            Request(op="insert", step=0, doc_id=800,
+                    text="the hue of sky is blue."),
+            Request(op="removal", step=1, doc_id=5),
+        ])
+    finally:
+        pipe.embedder.embed = original
+    assert isinstance(errs[0], RuntimeError)    # shared embed claims upserts
+    assert errs[1] is None                      # removal proceeded
+    assert 5 not in pipe.db.doc_slots
+
+
+# -- deterministic sim fault model -------------------------------------------
+
+
+def test_sim_replica_failure_deterministic_and_lossless():
+    """The acceptance bar: the replica-kill scenario completes with zero
+    lost or hung requests, exercises the requeue path, and its recovery
+    timeline is bit-deterministic across runs."""
+    spec = golden_variant("replica_failure")
+    a = ScenarioRunner(spec).simulate()
+    b = ScenarioRunner(spec).simulate()
+    assert golden_dict(a, spec) == golden_dict(b, spec)
+    assert a.fault_events == b.fault_events
+    s = a.summary
+    assert s["availability"] == 1.0 and s["error_rate"] == 0.0
+    assert s["n_queries"] == spec.n_requests      # every request terminal
+    assert s["n_retried"] > 0                     # kills landed mid-batch
+    kinds = [(e["action"], e["kind"]) for e in a.fault_events]
+    assert kinds.count(("inject", "replica_kill")) == 2
+    assert kinds.count(("respawn", "replica_kill")) == 2
+    # each respawn fires exactly respawn_delay_s after its kill
+    times = [e["t_s"] for e in a.fault_events]
+    assert times[1] - times[0] == pytest.approx(spec.faults.respawn_delay_s)
+
+
+def test_sim_straggler_detected_and_retired():
+    spec = golden_variant("straggler_degrade")
+    report = ScenarioRunner(spec).simulate()
+    retires = [e for e in report.scaling_events if e["kind"] == "retire"]
+    assert len(retires) == 1
+    assert retires[0]["stage"] == "retrieval" and retires[0]["new"] == -1
+    assert report.deterministic_replay            # replay reproduces retire
+    assert report.summary["availability"] == 1.0
+
+
+def test_sim_writer_stall_spikes_then_recovers():
+    spec = golden_variant("writer_stall")
+    report = ScenarioRunner(spec).simulate()
+    stall = spec.faults.events[0]
+    s = report.summary
+    # mutations arriving during the freeze waited ~the stall length
+    assert s["p95_mutation_latency_ms"] > stall.duration_s * 1e3 * 0.8
+    assert s["availability"] == 1.0               # all drained on resume
+    baseline = ScenarioRunner(
+        spec.replace(faults=FaultSpec())).simulate()
+    assert baseline.summary["p95_mutation_latency_ms"] < \
+        s["p95_mutation_latency_ms"] / 5          # the spike is the fault
+
+
+def test_sim_fault_free_chaos_scenarios_match_plain_run():
+    """faults=FaultSpec() is the identity: an empty chaos block must not
+    perturb the simulated timeline at all."""
+    spec = golden_variant("steady")
+    a = ScenarioRunner(spec).simulate()
+    b = ScenarioRunner(spec.replace(faults=FaultSpec())).simulate()
+    assert golden_dict(a, spec) == golden_dict(b, spec)
