@@ -12,7 +12,8 @@ from benchmarks import (accuracy_eval, chaos, elastic_scaling, gen_engine,
                         index_schemes, indexing_breakdown, monitor_overhead,
                         query_breakdown, resource_limits,
                         resource_utilization, scenarios, sensitivity,
-                        serving, stage_pipeline, update_workload)
+                        serving, sharded_retrieval, stage_pipeline,
+                        update_workload)
 from benchmarks.common import emit
 
 MODULES = {
@@ -31,6 +32,7 @@ MODULES = {
     "gen_engine": gen_engine,                 # lock-step vs continuous batching
     "scenarios": scenarios,                   # named scenario suite (sim mode)
     "chaos": chaos,                           # fault injection + recovery
+    "sharded_retrieval": sharded_retrieval,   # corpus scaling at flat p99
 }
 
 

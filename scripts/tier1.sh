@@ -37,4 +37,10 @@ echo "== tier-1: chaos recovery smoke (fault injection, deterministic) =="
 # kill->respawn pairing, straggler retire, writer-stall spike + drain
 python -m benchmarks.chaos --check > /dev/null
 
+echo "== tier-1: sharded retrieval smoke (parity + flat-p99 scaling) =="
+# --check asserts: n_shards=1 output-identical to JaxVectorDB, 4-shard
+# recall parity, and sim-backed p99 within 1.3x single-shard while the
+# corpus scales 8x (the shard_scale golden itself rides scenarios --check)
+python -m benchmarks.sharded_retrieval --smoke --check > /dev/null
+
 echo "tier-1 OK"

@@ -416,9 +416,17 @@ class JaxVectorDB(DBInstance):
                 "nprobe": self.cfg.nprobe,
             }
 
-    def _search_arrays(self, q, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    def _search_arrays(self, q, k: int,
+                       snap: Optional[Dict[str, object]] = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k against ``snap`` (defaults to a fresh ``_snapshot()``).
+
+        Callers that coordinate several databases — the sharded wrapper —
+        take every snapshot under one lock first, then score outside it.
+        """
         cfg = self.cfg
-        snap = self._snapshot()
+        if snap is None:
+            snap = self._snapshot()
         live, indexed = snap["live"], snap["indexed"]
         main_live = live & indexed if cfg.use_hybrid else live
         if not snap["built"]:
@@ -440,6 +448,9 @@ class JaxVectorDB(DBInstance):
 
     def _search_main(self, q, live, k: int, snap: Dict[str, object]):
         cfg = self.cfg
+        # ladder values are sized for the global nlist; a row-partitioned
+        # shard has proportionally fewer lists, so clamp
+        nprobe = min(int(snap["nprobe"]), cfg.nlist)
         if cfg.index_type == "flat":
             if cfg.quant == "sq8" and snap["sq_codes"] is not None:
                 return _sq8_flat_search(q, jnp.asarray(snap["sq_codes"]),
@@ -453,11 +464,11 @@ class JaxVectorDB(DBInstance):
                 jnp.asarray(snap["pq_codebook"]),
                 live, jnp.asarray(snap["centroids"]),
                 jnp.asarray(snap["buckets"]),
-                jnp.asarray(snap["bucket_live"]), snap["nprobe"], k)
+                jnp.asarray(snap["bucket_live"]), nprobe, k)
         return _ivf_search(q, jnp.asarray(snap["vectors"]), live,
                            jnp.asarray(snap["centroids"]),
                            jnp.asarray(snap["buckets"]),
-                           jnp.asarray(snap["bucket_live"]), snap["nprobe"], k)
+                           jnp.asarray(snap["bucket_live"]), nprobe, k)
 
     # -- misc --------------------------------------------------------------
 

@@ -27,6 +27,15 @@ NEG = -3.0e38
 def local_topk(q, vecs, live, k: int):
     scores = q @ vecs.T
     scores = jnp.where(live[None, :], scores, NEG)
+    rows = scores.shape[1]
+    if k > rows:
+        # A shard holding fewer than k rows must not trace-error: emit the
+        # rows it has and pad with NEG scores / -1 ids, which the merge
+        # step masks out of the final result.
+        s, i = jax.lax.top_k(scores, rows)
+        s = jnp.pad(s, ((0, 0), (0, k - rows)), constant_values=NEG)
+        i = jnp.pad(i, ((0, 0), (0, k - rows)), constant_values=-1)
+        return s, i
     return jax.lax.top_k(scores, k)
 
 
@@ -43,7 +52,8 @@ def make_sharded_topk(mesh: Mesh, k: int, corpus_axes=("pod", "data")):
         s, i = local_topk(q, vecs, live, k)
         shard_id = jax.lax.axis_index(axes) if axes else 0
         rows_per_shard = vecs.shape[0]
-        gi = i + shard_id * rows_per_shard
+        # keep pad ids (-1) out of the global-id arithmetic
+        gi = jnp.where(i < 0, -1, i + shard_id * rows_per_shard)
         # gather the candidate lists from every shard: [nq, n_shards*k]
         s_all = jax.lax.all_gather(s, axes, axis=1, tiled=True)
         gi_all = jax.lax.all_gather(gi, axes, axis=1, tiled=True)

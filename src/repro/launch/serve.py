@@ -221,6 +221,8 @@ def main(argv=None):
     pipe = build(spec)
     monitor = ResourceMonitor(MonitorConfig(out_path=args.monitor_out)).start()
     monitor.add_gauge("db_live", lambda: pipe.db.stats()["live"])
+    if hasattr(pipe.db, "gauges"):   # sharded backend: per-shard balance
+        monitor.add_gauges(pipe.db.gauges())
 
     corpus = SyntheticCorpus(CorpusConfig(n_docs=args.docs))
     t0 = time.perf_counter()

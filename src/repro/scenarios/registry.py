@@ -144,6 +144,20 @@ register_scenario(ScenarioSpec(
     ])))
 
 register_scenario(ScenarioSpec(
+    name="shard_scale",
+    description="Mixed zipfian read/update stream against the 4-way "
+                "sharded vector DB (repro.sharded): shard-parallel scan "
+                "plus the O(shards·k) merge reduction must hold retrieval "
+                "tails flat while the hash router keeps every mutation "
+                "shard-local behind the serialized writer.",
+    arrival=ArrivalSpec(process="poisson", target_qps=80.0),
+    mix=MixSpec(query_frac=0.8, update_frac=0.2, distribution="zipfian"),
+    n_docs=64, n_requests=320, slo_ms=150.0, seed=0,
+    autoscale=_AUTOSCALE,
+    pipeline={"vectordb": {"component": "sharded",
+                           "options": {"n_shards": 4}}}))
+
+register_scenario(ScenarioSpec(
     name="diurnal_ramp",
     description="Sinusoidally ramping load (one trough→peak→trough 'day'): "
                 "the slow swell regime where scale-up must track the ramp "

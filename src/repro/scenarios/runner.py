@@ -19,6 +19,7 @@ knob-ladder "win" that held latency by degrading recall is charged for it.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -138,6 +139,10 @@ class ScenarioRunner:
         requests = requests[:n]
         acfg = self._autoscale_config()
         pspec = spec.pipeline_spec()
+        n_shards = (int(pspec.vectordb.options.get("n_shards", 1) or 1)
+                    if pspec.vectordb.component == "sharded" else 1)
+        if n_shards > 1:
+            cost = dataclasses.replace(cost or CostModel(), shards=n_shards)
         sim = ScenarioSim(requests, times[:n], acfg,
                           replicas=pspec.stage_replicas(),
                           batch_sizes=pspec.stage_batch_sizes(),

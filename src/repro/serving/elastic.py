@@ -369,6 +369,10 @@ class ElasticExecutor:
             out[f"elastic_{stage.name}_replicas"] = \
                 (lambda si=si: float(self._target[si]))
         out["elastic_write_queue_depth"] = lambda: float(self._wq.qsize())
+        for stage in self.stages:
+            db = getattr(stage, "db", None)
+            if db is not None and hasattr(db, "gauges"):
+                out.update(db.gauges())   # sharded backend: balance/shards
         out["elastic_nprobe"] = lambda: float(self.knobs["nprobe"])
         out["elastic_rerank_k"] = lambda: float(self.knobs["rerank_k"])
         out["elastic_max_new"] = lambda: float(self.knobs.get("max_new", 0))
@@ -380,10 +384,14 @@ class ElasticExecutor:
         rows = []
         with self._lock:
             for si, stage in enumerate(self.stages):
-                rows.append({**self.stats[si].row(),
-                             "queue_depth": float(self.queues[si].qsize()),
-                             "batch_size":
-                                 float(self.batch_sizes[stage.name])})
+                row = {**self.stats[si].row(),
+                       "queue_depth": float(self.queues[si].qsize()),
+                       "batch_size": float(self.batch_sizes[stage.name])}
+                db = getattr(stage, "db", None)
+                n_shards = getattr(getattr(db, "cfg", None), "n_shards", 0)
+                if n_shards:   # sharded retrieval rides the stage row
+                    row["shards"] = float(n_shards)
+                rows.append(row)
         return rows
 
     def recent_p95_ms(self) -> float:

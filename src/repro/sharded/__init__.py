@@ -1,0 +1,7 @@
+"""Sharded multi-host retrieval: a mesh-partitioned vector DB that sits
+behind the component registry like any other ``vectordb`` backend."""
+from repro.sharded.vectordb import (ShardedDBConfig, ShardedVectorDB,
+                                    doc_shard, make_sharded_db)
+
+__all__ = ["ShardedDBConfig", "ShardedVectorDB", "doc_shard",
+           "make_sharded_db"]

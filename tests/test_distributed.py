@@ -148,3 +148,77 @@ def test_sharded_topk_multidevice_subprocess():
                        capture_output=True, text=True, timeout=300,
                        cwd=__file__.rsplit("/tests/", 1)[0])
     assert "SHARDED_TOPK_OK 4" in r.stdout, r.stdout + r.stderr
+
+
+def test_local_topk_pads_when_k_exceeds_rows():
+    """k larger than a shard's row count pads (NEG, -1) instead of erroring."""
+    import jax.numpy as jnp
+    from repro.distributed.collectives import NEG, local_topk
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((3, 8)).astype(np.float32))
+    vecs = jnp.asarray(rng.standard_normal((5, 8)).astype(np.float32))
+    live = jnp.asarray(np.array([True, True, False, True, True]))
+    s, i = local_topk(q, vecs, live, k=9)
+    s, i = np.asarray(s), np.asarray(i)
+    assert s.shape == (3, 9) and i.shape == (3, 9)
+    assert (s[:, 5:] <= NEG / 2).all() and (i[:, 5:] == -1).all()
+    ref = np.array(q @ vecs.T)
+    ref[:, ~np.asarray(live)] = NEG
+    assert (i[:, :4] == np.argsort(-ref, axis=1)[:, :4]).all()
+
+
+_SHARDED_DB_PROG = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import numpy as np
+from repro.core.interfaces import Chunk
+from repro.distributed.sharding import sharding_rules
+from repro.launch.mesh import make_mesh
+from repro.sharded import ShardedDBConfig, ShardedVectorDB
+
+mesh = make_mesh((4, 2), ("data", "model"))
+rng = np.random.default_rng(0)
+N, d, k = 480, 32, 6
+vecs = rng.standard_normal((N, d)).astype(np.float32)
+chunks = [Chunk(chunk_id=-1, doc_id=i // 4, text=f"c{i}") for i in range(N)]
+q = vecs[:5] + 0.01 * rng.standard_normal((5, d)).astype(np.float32)
+top_ref = np.argsort(-(q @ vecs.T), axis=1)[:, :k]
+
+db = ShardedVectorDB(ShardedDBConfig(
+    n_shards=4, index_type="flat", dim=d, capacity=1024,
+    corpus_axes=("data",)))
+db.insert(vecs, chunks)
+with sharding_rules(mesh):
+    res = db.search(q, k)
+assert db.counters["mesh_searches"] == 1, db.counters
+for i, r in enumerate(res):
+    got = {db.get_chunk(c).text for c in r.chunk_ids if c >= 0}
+    assert got == {f"c{j}" for j in top_ref[i]}, (i, got)
+# mutations invalidate the device-resident stack: remove then re-search
+db.remove(int(top_ref[0][0]) // 4)
+with sharding_rules(mesh):
+    res2 = db.search(q, k)
+assert db.counters["mesh_searches"] == 2
+gone = {f"c{j}" for j in range((top_ref[0][0] // 4) * 4,
+                               (top_ref[0][0] // 4) * 4 + 4)}
+for r in res2:
+    assert not ({db.get_chunk(c).text for c in r.chunk_ids if c >= 0} & gone)
+# without an active mesh the same db falls back to the host-side merge
+res3 = db.search(q, k)
+assert db.counters["mesh_searches"] == 2
+assert [set(r.chunk_ids.tolist()) for r in res3] == \
+    [set(r.chunk_ids.tolist()) for r in res2]
+print("SHARDED_DB_MESH_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_db_multidevice_subprocess():
+    """ShardedVectorDB's fused shard_map path on 8 fake host devices:
+    exact flat top-k, epoch invalidation on mutation, and host-merge
+    fallback parity when no mesh is active."""
+    r = subprocess.run([sys.executable, "-c", _SHARDED_DB_PROG],
+                       capture_output=True, text=True, timeout=300,
+                       cwd=__file__.rsplit("/tests/", 1)[0])
+    assert "SHARDED_DB_MESH_OK" in r.stdout, r.stdout + r.stderr

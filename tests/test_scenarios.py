@@ -18,8 +18,8 @@ from repro.scenarios import (GOLDEN_DIR, ScenarioRunner, ScenarioSpec,
 from repro.serving.arrival import ArrivalConfig, arrival_times
 
 ALL_SCENARIOS = ["burst_tolerance", "diurnal_ramp", "mixed_interference",
-                 "replica_failure", "steady", "straggler_degrade",
-                 "update_storm", "writer_stall"]
+                 "replica_failure", "shard_scale", "steady",
+                 "straggler_degrade", "update_storm", "writer_stall"]
 
 
 # -- spec ---------------------------------------------------------------------
