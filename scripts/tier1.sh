@@ -43,4 +43,16 @@ echo "== tier-1: sharded retrieval smoke (parity + flat-p99 scaling) =="
 # corpus scales 8x (the shard_scale golden itself rides scenarios --check)
 python -m benchmarks.sharded_retrieval --smoke --check > /dev/null
 
+echo "== tier-1: tracing overhead gate (on/off A-B, pinned budget) =="
+# --check asserts: span recording costs <=3% throughput and <=3% p99 on
+# the steady scenario served live through the elastic executor
+python -m benchmarks.overhead --smoke --check > /dev/null
+
+echo "== tier-1: trace export smoke (sim spans -> Chrome trace) =="
+# deterministic sim trace written as Chrome trace_event JSON + JSONL,
+# then structurally validated by the exporter CLI
+python -m repro.launch.serve --scenario steady --scenario-sim \
+    --scenario-scale 0.25 --trace-out /tmp/ragperf_tier1_trace.json > /dev/null
+python -m repro.obs /tmp/ragperf_tier1_trace.json > /dev/null
+
 echo "tier-1 OK"

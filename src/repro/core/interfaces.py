@@ -106,3 +106,6 @@ class StageTrace:
     ground_truth: str = ""
     gold_chunk_ids: List[int] = field(default_factory=list)
     latency_s: Dict[str, float] = field(default_factory=dict)
+    # attempts the request took through the elastic retry path (1 = clean
+    # first pass); latency_s accumulates every attempt's service time
+    n_attempts: int = 1

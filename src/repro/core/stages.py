@@ -73,6 +73,10 @@ class Stage(abc.ABC):
                  timer: Optional[StageTimer] = None):
         self.batch_size = batch_size
         self.timer = timer
+        # optional obs.Tracer for lock-step runs (attach_pipeline); the
+        # staged/elastic executors trace per item themselves and leave this
+        # None to avoid double-recording service time
+        self.tracer = None
 
     def run(self, batch: QueryBatch) -> QueryBatch:
         t0 = time.perf_counter()
@@ -81,10 +85,15 @@ class Stage(abc.ABC):
                 self._apply(batch)
         else:
             self._apply(batch)
+        dt = time.perf_counter() - t0
         if len(batch):
             batch.latency_s[self.name] = (
-                batch.latency_s.get(self.name, 0.0)
-                + (time.perf_counter() - t0) / len(batch))
+                batch.latency_s.get(self.name, 0.0) + dt / len(batch))
+        tr = self.tracer
+        if tr is not None:
+            te = tr.now()
+            tr.add_span(self.name, te - dt, te, cat="service",
+                        tid=self.name, n=len(batch))
         return batch
 
     def replica_copy(self) -> "Stage":
@@ -186,12 +195,14 @@ class GenerateStage(Stage):
 
 
 def traces_from_batch(batch: QueryBatch,
-                      latency_s: Optional[List[Dict[str, float]]] = None
+                      latency_s: Optional[List[Dict[str, float]]] = None,
+                      n_attempts: Optional[List[int]] = None
                       ) -> List[StageTrace]:
     """Assemble the per-request §3.3.2 traces from a fully-processed batch.
 
     ``latency_s`` overrides the batch-shared latency dict with per-request
-    dicts (the pipelined executor tracks latency per item, not per batch).
+    dicts (the pipelined executor tracks latency per item, not per batch);
+    ``n_attempts`` carries the elastic retry count per request (default 1).
     """
     assert batch.answers is not None, "batch has not run all stages"
     traces = []
@@ -205,6 +216,7 @@ def traces_from_batch(batch: QueryBatch,
             ground_truth=batch.ground_truth[i],
             gold_chunk_ids=list(batch.gold_chunks[i]),
             latency_s=latency_s[i] if latency_s else dict(batch.latency_s),
+            n_attempts=n_attempts[i] if n_attempts else 1,
         ))
     return traces
 

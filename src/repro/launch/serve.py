@@ -40,6 +40,8 @@ from repro.core.registry import build
 from repro.core.spec import GenSpec, PipelineSpec
 from repro.metrics.quality import evaluate_traces
 from repro.monitor.monitor import MonitorConfig, ResourceMonitor
+from repro.obs import (MetricsRegistry, Tracer, VirtualClock, WallClock,
+                       attach_pipeline, write_chrome_trace, write_jsonl)
 from repro.serving.arrival import ArrivalConfig
 from repro.serving.autoscale import AutoscaleConfig, AutoscaleController
 from repro.serving.batcher import BatchPolicy
@@ -65,6 +67,16 @@ def spec_from_args(args) -> PipelineSpec:
     return spec
 
 
+def write_trace(path: str, tracer, registry=None) -> None:
+    """Emit the Chrome/Perfetto ``trace_event`` JSON plus a line-delimited
+    sibling (``<path minus .json>.jsonl``) for downstream tooling."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    write_chrome_trace(path, tracer, registry)
+    stem = path[:-5] if path.endswith(".json") else path
+    write_jsonl(stem + ".jsonl", tracer, registry)
+    print(f"wrote {path} ({len(tracer)} trace events) and {stem}.jsonl")
+
+
 def run_scenario(args) -> None:
     """Drive one registered scenario (live or deterministic-sim mode) and
     print/emit the unified scenario report."""
@@ -79,7 +91,14 @@ def run_scenario(args) -> None:
     if args.seed is not None:
         spec = spec.replace(seed=args.seed)
     runner = ScenarioRunner(spec)
-    report = runner.simulate() if args.scenario_sim else runner.serve()
+    tracer = None
+    if args.trace_out:
+        # sim spans land at explicit virtual times (bit-deterministic);
+        # live spans ride the run-relative wall clock
+        tracer = Tracer(clock=VirtualClock() if args.scenario_sim
+                        else WallClock())
+    report = (runner.simulate(tracer=tracer) if args.scenario_sim
+              else runner.serve(tracer=tracer))
     s = report.summary
     print(f"scenario {spec.name} ({report.mode}): "
           f"{int(s.get('n_queries', 0))} queries / "
@@ -108,6 +127,15 @@ def run_scenario(args) -> None:
               f"({int(s.get('n_failed', 0))} failed / "
               f"{int(s.get('n_retried', 0))} retried)")
     print("quality:", {k: round(v, 3) for k, v in report.quality.items()})
+    if report.trace_decomposition:
+        parts = [f"{c} {v.get('p95_ms', 0.0):.2f}"
+                 for c, v in report.trace_decomposition.items()]
+        print("critical path p95 (ms):", ", ".join(parts))
+    if tracer is not None:
+        registry = MetricsRegistry()
+        registry.absorb_stage_rows(report.stage_report, t=0.0)
+        registry.absorb_scale_events(report.scaling_events)
+        write_trace(args.trace_out, tracer, registry)
     if args.json_out:
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
         with open(args.json_out, "w") as f:
@@ -177,6 +205,10 @@ def main(argv=None):
     ap.add_argument("--json-out", default="",
                     help="write the run document (summary, per-stage "
                          "occupancy table, scaling events) as JSON")
+    ap.add_argument("--trace-out", default="",
+                    help="record per-request spans and write a Chrome/"
+                         "Perfetto trace_event JSON (plus a .jsonl sibling); "
+                         "with --scenario-sim the trace is bit-deterministic")
     # scenario suite (repro.scenarios): named, seeded workload scenarios
     ap.add_argument("--scenario", default="",
                     help="run a registered benchmark scenario by name "
@@ -219,6 +251,19 @@ def main(argv=None):
     slo_ms = (args.slo_ms if args.slo_ms is not None
               else spec.autoscale.slo_ms if elastic_on else 500.0)
     pipe = build(spec)
+    tracer = registry = None
+    if args.trace_out:
+        tracer = Tracer(clock=WallClock())
+        registry = MetricsRegistry(clock=tracer.clock)
+        if not elastic_on:
+            # lock-step / staged paths: batch-level stage spans; the elastic
+            # executor records richer per-item spans itself (never both)
+            attach_pipeline(tracer, pipe)
+        if hasattr(pipe.db, "tracer"):
+            pipe.db.tracer = tracer
+        eng = getattr(pipe.llm, "engine", None)
+        if eng is not None:
+            eng.tracer = tracer
     monitor = ResourceMonitor(MonitorConfig(out_path=args.monitor_out)).start()
     monitor.add_gauge("db_live", lambda: pipe.db.stats()["live"])
     if hasattr(pipe.db, "gauges"):   # sharded backend: per-shard balance
@@ -266,7 +311,8 @@ def main(argv=None):
                 batch_sizes=spec.stage_batch_sizes(),
                 default_batch=args.batch,
                 max_replicas=args.max_replicas
-                or spec.autoscale.max_replicas)
+                or spec.autoscale.max_replicas,
+                tracer=tracer)
             acfg = AutoscaleConfig.from_spec(
                 spec.autoscale, base_nprobe=executor.knobs["nprobe"],
                 base_rerank_k=executor.knobs["rerank_k"],
@@ -277,7 +323,7 @@ def main(argv=None):
                 acfg.interval_s = args.autoscale_interval_ms / 1e3
             controller = AutoscaleController(acfg, executor=executor)
         harness = ServingHarness(pipe, corpus, wcfg, scfg,
-                                 executor=executor)
+                                 executor=executor, tracer=tracer)
         monitor.add_gauges(harness.gauges())
         if controller is not None:
             controller.start()
@@ -333,7 +379,11 @@ def main(argv=None):
                 if r.op == "query"]
         golds = [gold_chunks_for(pipe.db, r.gold_doc_id, r.answer)
                  for r in reqs]
-        staged = StagedExecutor(pipe, default_batch=args.batch)
+        if tracer is not None:
+            for st in pipe.stages:   # staged emits per-item spans itself
+                st.tracer = None
+        staged = StagedExecutor(pipe, default_batch=args.batch,
+                                tracer=tracer)
         monitor.add_gauges(staged.gauges())
         pipe.traces.clear()
         sres = staged.run([r.question for r in reqs],
@@ -365,6 +415,17 @@ def main(argv=None):
     print("stage breakdown (s):",
           {k: round(v, 3) for k, v in pipe.breakdown().items()})
     monitor.stop()
+    if tracer is not None:
+        # one unified timeline: monitor samples, stage occupancy, gen
+        # stats and scaling events land next to the request spans
+        registry.absorb_monitor(monitor)
+        if gen_block:
+            registry.absorb_gen_stats(gen_block, t=tracer.now())
+        if args.mode != "sync" and executor is not None:
+            registry.absorb_stage_rows([st.row() for st in executor.stats],
+                                       t=tracer.now())
+            registry.absorb_scale_events(controller.event_dicts())
+        write_trace(args.trace_out, tracer, registry)
 
     if args.json_out:
         json_doc["stage_breakdown"] = pipe.breakdown()

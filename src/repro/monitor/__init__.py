@@ -1,2 +1,3 @@
 from repro.monitor.monitor import (  # noqa: F401
-    ResourceMonitor, RingBuffer, StageTimer, MonitorConfig)
+    GAUGE_SCHEMA, ResourceMonitor, RingBuffer, StageTimer, MonitorConfig,
+    gauge_family, gauges_schema)

@@ -26,12 +26,51 @@ import os
 import sys
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 PAGE = os.sysconf("SC_PAGE_SIZE") if hasattr(os, "sysconf") else 4096
+
+# -- gauge naming schema ------------------------------------------------------
+#
+# Every monitor time-series belongs to a documented family so downstream
+# consumers (MetricsRegistry.absorb_monitor, dashboards, the trace exporter)
+# can route and aggregate by prefix instead of guessing.  ``add_gauge``
+# warns (DeprecationWarning) on names outside the schema; ad-hoc keys still
+# record, but they are on notice.
+GAUGE_SCHEMA: Dict[str, str] = {
+    # exact names: the host probes _sample_once pushes every period
+    "host_rss_bytes": "process resident set size (bytes)",
+    "cpu_util": "system-wide CPU utilization fraction over the period",
+    "io_read_Bps": "process read throughput (bytes/s) over the period",
+    "io_write_Bps": "process write throughput (bytes/s) over the period",
+    "jax_device_bytes": "bytes held by live JAX arrays ('device' memory)",
+    # prefix families (trailing underscore = prefix match)
+    "db_": "vector-DB gauges: db_live, db_shards, db_shard_imbalance, ...",
+    "serving_": "harness gauges: serving_queue_depth / _in_flight / ...",
+    "stage_": "staged-executor gauges: stage_<name>_queue_depth",
+    "elastic_": "elastic-executor gauges: elastic_<name>_queue_depth / "
+                "_replicas, elastic_write_queue_depth, knob values",
+    "gen_": "generation-engine stats mirrored onto the unified timeline",
+}
+
+
+def gauge_family(name: str) -> Optional[str]:
+    """The schema family a gauge name belongs to (None = off-schema)."""
+    if name in GAUGE_SCHEMA:
+        return name
+    for key in GAUGE_SCHEMA:
+        if key.endswith("_") and name.startswith(key):
+            return key
+    return None
+
+
+def gauges_schema() -> Dict[str, str]:
+    """The documented gauge naming schema (family -> description)."""
+    return dict(GAUGE_SCHEMA)
 
 
 class RingBuffer:
@@ -135,6 +174,13 @@ class ResourceMonitor:
         self._flushed = False
 
     def add_gauge(self, name: str, fn: Callable[[], float]) -> None:
+        if gauge_family(name) is None:
+            warnings.warn(
+                f"gauge {name!r} is outside the documented naming schema "
+                f"(see repro.monitor.gauges_schema()); ad-hoc keys are "
+                f"deprecated — use a family prefix "
+                f"({', '.join(k for k in GAUGE_SCHEMA if k.endswith('_'))})",
+                DeprecationWarning, stacklevel=2)
         self.callbacks[name] = fn
 
     def add_gauges(self, gauges: Dict[str, Callable[[], float]]) -> None:

@@ -1,0 +1,7 @@
+"""CLI: ``python -m repro.obs trace.json`` validates a Chrome trace file."""
+import sys
+
+from repro.obs.export import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -40,6 +40,7 @@ from repro.workload.corpus import CorpusConfig, SyntheticCorpus
 from repro.workload.generator import Request, WorkloadGenerator
 from repro.workload.runner import gold_chunks_for
 
+from repro.obs import decomposition_summary
 from repro.scenarios.sim import CostModel, ScenarioSim
 from repro.scenarios.spec import ScenarioSpec
 
@@ -66,6 +67,10 @@ class ScenarioReport:
     stage_report: List[Dict] = field(default_factory=list)
     fault_events: List[Dict] = field(default_factory=list)
     deterministic_replay: bool = True
+    # critical-path breakdown: queue + per-stage service p50/p95 (ms),
+    # computed from per-request component decomposition (repro.obs)
+    trace_decomposition: Dict[str, Dict[str, float]] = field(
+        default_factory=dict)
 
     def to_dict(self) -> Dict[str, object]:
         return {
@@ -76,6 +81,7 @@ class ScenarioReport:
             "stage_report": self.stage_report,
             "fault_events": self.fault_events,
             "deterministic_replay": self.deterministic_replay,
+            "trace_decomposition": self.trace_decomposition,
         }
 
 
@@ -128,7 +134,8 @@ class ScenarioRunner:
 
     # -- deterministic simulation (the golden-trace mode) --------------------
 
-    def simulate(self, cost: Optional[CostModel] = None) -> ScenarioReport:
+    def simulate(self, cost: Optional[CostModel] = None,
+                 tracer=None) -> ScenarioReport:
         spec = self.spec
         assert spec.arrival.mode == "open", \
             "simulate() models open-loop scenarios (closed loop is live-only)"
@@ -146,7 +153,7 @@ class ScenarioRunner:
         sim = ScenarioSim(requests, times[:n], acfg,
                           replicas=pspec.stage_replicas(),
                           batch_sizes=pspec.stage_batch_sizes(),
-                          cost=cost, faults=spec.faults)
+                          cost=cost, faults=spec.faults, tracer=tracer)
         res = sim.run()
 
         # quality replay: real pipeline, stream order, knobs pinned to each
@@ -241,12 +248,14 @@ class ScenarioRunner:
             summary=summary, quality=evaluate_traces(traces, pipe.db),
             scaling_events=events, knob_timeline=timeline,
             stage_report=res.stage_rows, fault_events=res.fault_log,
-            deterministic_replay=det)
+            deterministic_replay=det,
+            trace_decomposition=decomposition_summary(
+                [(q.latency_s, q.stage_s) for q in res.queries]))
 
     # -- live serving --------------------------------------------------------
 
     def serve(self, time_scale: float = 1.0, batch: int = 8,
-              batch_timeout_s: float = 0.005) -> ScenarioReport:
+              batch_timeout_s: float = 0.005, tracer=None) -> ScenarioReport:
         spec = self.spec
         pipe, corpus = self._build()
         pipe.query(["warmup query"])
@@ -267,13 +276,14 @@ class ScenarioRunner:
                 max_retries=spec.faults.max_retries,
                 straggler_tolerance=(spec.faults.straggler_tolerance
                                      if spec.faults.detect else 0.0),
-                straggler_window=spec.faults.straggler_window)
+                straggler_window=spec.faults.straggler_window,
+                tracer=tracer)
             controller = AutoscaleController(acfg, executor=executor)
             if spec.faults.enabled:
                 injector = FaultInjector(executor, spec.faults,
                                          time_scale=time_scale)
         harness = ServingHarness(pipe, corpus, spec.workload_config(), scfg,
-                                 executor=executor)
+                                 executor=executor, tracer=tracer)
         if controller is not None:
             controller.start()
         if injector is not None:
@@ -304,7 +314,10 @@ class ScenarioRunner:
             summary=res.summary, quality=res.quality,
             scaling_events=events, knob_timeline=timeline,
             stage_report=stage_rows, fault_events=fault_events,
-            deterministic_replay=det)
+            deterministic_replay=det,
+            trace_decomposition=decomposition_summary(
+                [(r.latency_s, r.stages) for r in res.records
+                 if r.op == "query" and r.ok]))
 
     # -- cross-executor equivalence (the test-matrix surface) ----------------
 
@@ -380,6 +393,11 @@ def golden_dict(report: ScenarioReport, spec: ScenarioSpec) -> Dict[str, object]
                     for k in GOLDEN_SUMMARY_KEYS if k in report.summary},
         "quality": {k: round(float(v), 6)
                     for k, v in sorted(report.quality.items())},
+        # the critical-path breakdown is pure virtual-time arithmetic, so
+        # it is bit-deterministic and golden-pinnable like the summary
+        "trace_decomposition": {
+            comp: {k: round(float(v), 6) for k, v in sorted(vals.items())}
+            for comp, vals in sorted(report.trace_decomposition.items())},
     }
 
 

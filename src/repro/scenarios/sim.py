@@ -85,6 +85,11 @@ class SimQuery:
     level: int = 0                  # quality-ladder level at retrieval start
     retries: int = 0                # requeues survived (replica kills)
     failed: bool = False            # terminal failure (retry budget spent)
+    t_enq: float = 0.0              # when the query last entered a queue
+    # accumulated per-stage service share (svc/n per batch, every attempt) —
+    # the virtual-time mirror of StageTrace.latency_s, and the input to the
+    # golden trace_decomposition block
+    stage_s: Dict[str, float] = field(default_factory=dict)
 
     @property
     def latency_s(self) -> float:
@@ -119,8 +124,12 @@ class ScenarioSim:
                  batch_sizes: Optional[Dict[str, int]] = None,
                  default_batch: int = 8,
                  cost: Optional[CostModel] = None,
-                 faults: Optional[FaultSpec] = None):
+                 faults: Optional[FaultSpec] = None,
+                 tracer=None):
         self.requests = requests
+        # optional obs.Tracer; spans are recorded at explicit *virtual*
+        # times, so two runs of the same spec produce bit-identical traces
+        self.tracer = tracer
         self.arrivals = [float(t) for t in arrivals]
         self.cost = cost if cost is not None else CostModel()
         self.controller = (AutoscaleController(acfg)
@@ -244,6 +253,17 @@ class ScenarioSim:
             self._n_batches[stage] += 1
             self._n_items[stage] += n
             self._busy_items[(stage, rid)] = items
+            share = svc / max(n, 1)
+            tr = self.tracer
+            for it in items:
+                it.stage_s[stage] = it.stage_s.get(stage, 0.0) + share
+                if tr is not None:
+                    tr.add_span(f"{stage}.queue", it.t_enq, self._now,
+                                cat="queue", tid=f"{stage}/r{rid}",
+                                req=it.stream_idx)
+                    tr.add_span(stage, self._now, self._now + svc,
+                                cat="service", tid=f"{stage}/r{rid}",
+                                req=it.stream_idx, replica=rid, n=n)
             if self._detect[STAGE_NAMES.index(stage)] is not None:
                 self._detect[STAGE_NAMES.index(stage)].record(
                     rid, svc / max(n, 1))
@@ -280,6 +300,7 @@ class ScenarioSim:
             return
         self._doomed.add((stage, rid))       # its done event is discarded
         survivors: List[SimQuery] = []
+        tr = self.tracer
         for it in items:
             it.retries += 1
             if it.retries > self.max_retries:
@@ -287,9 +308,16 @@ class ScenarioSim:
                 it.t_done = self._now
                 self.failed.append(it)
                 self._done += 1
+                if tr is not None:
+                    tr.instant("fail", t=self._now, cat="retry", tid=stage,
+                               req=it.stream_idx, attempts=it.retries)
             else:
                 self.n_retried += 1
+                it.t_enq = self._now
                 survivors.append(it)
+                if tr is not None:
+                    tr.instant("requeue", t=self._now, cat="retry", tid=stage,
+                               req=it.stream_idx, attempt=it.retries)
         self._pending[stage][:0] = survivors
         self._start_batches(stage)
 
@@ -331,6 +359,9 @@ class ScenarioSim:
             # the slowest shard (≈ ceil-even split of ops) bounds the batch
             per_shard = int(math.ceil(n / self.cost.shards))
             svc = self.cost.mutation_base_s + self.cost.mutation_s * per_shard
+        if self.tracer is not None:
+            self.tracer.add_span("writer.apply", self._now, self._now + svc,
+                                 cat="writer", tid="writer", n=n)
         self._push(self._now + svc, "wdone", batch)
 
     # -- controller ticks ----------------------------------------------------
@@ -422,7 +453,7 @@ class ScenarioSim:
             if kind == "arr":
                 i, req = payload
                 if req.op == "query":
-                    q = SimQuery(stream_idx=i, t_arrive=t)
+                    q = SimQuery(stream_idx=i, t_arrive=t, t_enq=t)
                     self._pending[STAGE_NAMES[0]].append(q)
                     self._depth_max[STAGE_NAMES[0]] = max(
                         self._depth_max[STAGE_NAMES[0]],
@@ -449,13 +480,20 @@ class ScenarioSim:
                 si = STAGE_NAMES.index(stage)
                 if si + 1 < len(STAGE_NAMES):
                     nxt = STAGE_NAMES[si + 1]
+                    for it in items:
+                        it.t_enq = t
                     self._pending[nxt].extend(items)
                     self._depth_max[nxt] = max(self._depth_max[nxt],
                                                len(self._pending[nxt]))
                     self._start_batches(nxt)
                 else:
+                    tr = self.tracer
                     for it in items:
                         it.t_done = t
+                        if tr is not None:
+                            tr.add_span("request", it.t_arrive, t,
+                                        cat="request", tid="request/query",
+                                        req=it.stream_idx, op="query", ok=True)
                         self.queries.append(it)
                         self._done += 1
                         self._recent_ms.append(it.latency_s * 1e3)

@@ -122,11 +122,12 @@ class ElasticExecutor:
                  queue_capacity: int = 512, coalesce_wait_s: float = 0.005,
                  mutation_batch: int = 8, max_retries: int = 2,
                  straggler_tolerance: float = 0.0,
-                 straggler_window: int = 16):
+                 straggler_window: int = 16, tracer=None):
         assert default_batch >= 1 and queue_capacity >= 1
         assert max_replicas >= 1 and mutation_batch >= 1
         assert max_retries >= 0
         self.pipeline = pipeline
+        self.tracer = tracer              # optional obs.Tracer
         self.stages = list(pipeline.stages)
         self.max_replicas = max_replicas
         self.coalesce_wait_s = coalesce_wait_s
@@ -528,6 +529,8 @@ class ElasticExecutor:
                             ground_truth=ground_truth,
                             gold=list(gold or []),
                             t_submit=time.perf_counter(), on_done=on_done)
+        if self.tracer is not None:
+            item.t_enq = self.tracer.now()
         if not self._put_abortable(self.queues[0], item):
             # aborted executor: never silently drop — the caller must still
             # see a terminal state for this request
@@ -561,7 +564,8 @@ class ElasticExecutor:
     def trace_for(self, item: _ElasticItem):
         """Per-request §3.3.2 trace for a completed item (service mode)."""
         return traces_from_batch(_batch_from_items([item]),
-                                 latency_s=[dict(item.latency_s)])[0]
+                                 latency_s=[dict(item.latency_s)],
+                                 n_attempts=[item.retries + 1])[0]
 
     # -- failure path -------------------------------------------------------
 
@@ -591,16 +595,25 @@ class ElasticExecutor:
         """Worker-exception isolation: the failed batch's items retry
         (bounded ``max_retries`` budget) or fail terminally through the
         collector — never a run-wide abort."""
+        tr = self.tracer
         for it in items:
             it.retries += 1
             if it.retries > self.max_retries:
                 it.error = err
                 with self._lock:
                     stats.n_failures += 1
+                if tr is not None:
+                    tr.instant("fail", tid=self.stages[si].name, req=it.idx,
+                               cat="retry", attempts=it.retries,
+                               error=type(err).__name__)
                 self._put_abortable(self.queues[-1], it)
             else:
                 with self._lock:
                     self.n_retried += 1
+                if tr is not None:
+                    it.t_enq = tr.now()
+                    tr.instant("requeue", tid=self.stages[si].name,
+                               req=it.idx, cat="retry", attempt=it.retries)
                 self._put_abortable(self.queues[si], it)
 
     def _killed(self, si: int, rid: int) -> bool:
@@ -664,6 +677,8 @@ class ElasticExecutor:
                     stats.idle_s += time.perf_counter() - t_wait
                 items = [first]
                 bs = self.batch_sizes[stage.name]
+                tr = self.tracer
+                t_co = tr.now() if tr is not None else 0.0
                 # deadline-triggered coalescing from the *shared* queue: wait
                 # briefly for a full micro-batch, flush at once when the
                 # stream is closed
@@ -677,6 +692,10 @@ class ElasticExecutor:
                             items.append(in_q.get_nowait())
                     except queue.Empty:
                         break
+                if tr is not None:
+                    tr.add_span(f"{stage.name}.coalesce", t_co, tr.now(),
+                                cat="coalesce", tid=f"{stage.name}/r{rid}",
+                                n=len(items), target=bs)
                 if self._killed(si, rid):
                     # died holding a claimed batch: the items ride the
                     # requeue/fail path, exactly like a worker exception
@@ -693,15 +712,42 @@ class ElasticExecutor:
     def _run_batch(self, si: int, rid: int, stage, stats: StageStats,
                    items: List[_ElasticItem], out_q: queue.Queue) -> None:
         qb = _batch_from_items(items)
+        tr = self.tracer
         t0 = time.perf_counter()
+        if tr is not None:
+            t_svc = tr.now()
+            for it in items:
+                if it.t_enq > 0.0:
+                    tr.add_span(f"{stage.name}.queue", it.t_enq, t_svc,
+                                cat="queue", tid=f"{stage.name}/r{rid}",
+                                req=it.idx, attempt=it.retries)
         if si == 0:
             for it in items:
-                it.t_start = t0
+                # anchor once, at the first service start: a requeued item
+                # keeps its original dequeue time, so queue_wait measures
+                # arrival -> first service and retry time lands in service
+                if it.t_start == 0.0:
+                    it.t_start = t0
         try:
             qb = stage.run(qb)
         except Exception as e:                       # noqa: BLE001
+            dt = time.perf_counter() - t0
+            # the failed attempt's service time must not vanish from the
+            # per-request trace: attribute its per-item share now (the
+            # retry's share accumulates on top via _scatter_to_items)
+            share = dt / max(len(items), 1)
+            for it in items:
+                it.latency_s[stage.name] = \
+                    it.latency_s.get(stage.name, 0.0) + share
+            if tr is not None:
+                te = tr.now()
+                for it in items:
+                    tr.add_span(stage.name, te - dt, te, cat="service",
+                                tid=f"{stage.name}/r{rid}", req=it.idx,
+                                replica=rid, attempt=it.retries,
+                                error=type(e).__name__)
             with self._lock:
-                stats.busy_s += time.perf_counter() - t0
+                stats.busy_s += dt
                 stats.n_batches += 1
             self._requeue_or_fail(si, stats, items, e)
             return
@@ -716,6 +762,13 @@ class ElasticExecutor:
             stats.n_batches += 1
             stats.n_items += len(items)
             self._straggler[si].record(rid, dt / max(len(items), 1))
+        if tr is not None:
+            te = tr.now()
+            for it in items:
+                tr.add_span(stage.name, te - dt, te, cat="service",
+                            tid=f"{stage.name}/r{rid}", req=it.idx,
+                            replica=rid, attempt=it.retries, n=len(items))
+                it.t_enq = te
         t1 = time.perf_counter()
         for it in items:
             self._put_abortable(out_q, it)
@@ -792,7 +845,15 @@ class ElasticExecutor:
                 # the already-coalesced batch too, not just the next one
                 if not self._wait_writer_stall():
                     return
+                tw = time.perf_counter()
                 errs = self._apply_mutations([req for req, _ in batch])
+                if self.tracer is not None:
+                    dt = time.perf_counter() - tw
+                    te = self.tracer.now()
+                    self.tracer.add_span(
+                        "writer.apply", te - dt, te, cat="writer",
+                        tid="writer", n=len(batch),
+                        failed=sum(1 for e in errs if e is not None))
                 self.write_batches.append(len(batch))
                 with self._lock:
                     self.mutations_applied += \
@@ -900,7 +961,8 @@ class ElasticExecutor:
             raise failed[0].error
         traces = traces_from_batch(
             _batch_from_items(done),
-            latency_s=[dict(it.latency_s) for it in done])
+            latency_s=[dict(it.latency_s) for it in done],
+            n_attempts=[it.retries + 1 for it in done])
         self.pipeline.traces.extend(traces)
         return ElasticResult(traces=traces, wall_s=wall,
                              throughput_qps=n / wall if wall > 0 else 0.0,

@@ -165,6 +165,9 @@ class GenEngine:
         self.n_steps = 0
         self.n_prefill_chunks = 0
         self.n_decode_steps = 0
+        # optional obs.Tracer for token-level events (prefill chunks, first
+        # token, retirement); replicas inherit it via clone()
+        self.tracer = None
 
     # -- replica support ----------------------------------------------------
 
@@ -182,6 +185,7 @@ class GenEngine:
                          max_new=self._max_new_cap,
                          stats=stats if stats is not None else self.stats)
         twin.set_max_new(self.max_new)
+        twin.tracer = self.tracer
         return twin
 
     def set_max_new(self, n: int) -> int:
@@ -291,6 +295,10 @@ class GenEngine:
             jnp.asarray(req.slot, jnp.int32), jnp.asarray(off, jnp.int32))
         self.n_prefill_chunks += k
         req.filled = off + n
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("gen.prefill_chunk", cat="gen", tid="gen",
+                       rid=req.rid, chunks=k, filled=req.filled)
         # park the slot's decode position at the *next* write offset: a
         # ride-along decode write lands exactly where the next real write
         # (chunk or first decode token) will overwrite it
@@ -301,6 +309,9 @@ class GenEngine:
                 jnp.argmax(logits[0, req.prompt_len - 1 - off])))
             req.out.append(first)
             req.t_first = time.perf_counter()
+            if tr is not None:
+                tr.instant("gen.first_token", cat="gen", tid="gen",
+                           rid=req.rid)
             req.state = "decode"
             self._cur[req.slot] = first
             self._pos[req.slot] = req.prompt_len
@@ -344,6 +355,10 @@ class GenEngine:
         if req.t_done == 0.0:
             req.t_done = time.perf_counter()
         req.state = "done"
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("gen.retire", cat="gen", tid="gen",
+                       rid=req.rid, tokens=len(req.out))
         self.stats.record(req.ttft_s, req.tpot_s, len(req.out))
         self._slot_req[req.slot] = None
         self._free.append(req.slot)

@@ -60,7 +60,7 @@ class ServingResult:
 class ServingHarness:
     def __init__(self, pipeline, corpus: SyntheticCorpus,
                  wcfg: WorkloadConfig, scfg: ServingConfig,
-                 executor=None):
+                 executor=None, tracer=None):
         if isinstance(pipeline, PipelineSpec):
             # spec path: the harness owns construction, so it also indexes
             # the corpus it is about to serve
@@ -71,6 +71,7 @@ class ServingHarness:
         self.wcfg = wcfg
         self.scfg = scfg
         self.executor = executor          # ElasticExecutor backend (optional)
+        self.tracer = tracer              # optional obs.Tracer
         self.accountant = LatencyAccountant(slo_ms=scfg.slo_ms)
         self.batcher = ContinuousBatcher(scfg.policy)
         self.batch_sizes: List[int] = []
@@ -129,6 +130,12 @@ class ServingHarness:
             sub.record.start_s = sub.record.end_s
         sub.record.ok = ok
         sub.error = err
+        tr = self.tracer
+        if tr is not None:
+            te = tr.now()
+            tr.add_span("request", te - sub.record.latency_s, te,
+                        cat="request", tid=f"request/{sub.record.op}",
+                        req=sub.record.req_id, op=sub.record.op, ok=ok)
         self.accountant.observe(sub.record)
         with self._if_lock:
             self._in_flight -= 1

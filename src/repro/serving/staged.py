@@ -51,6 +51,10 @@ class _Item:
     reranked: Optional[List[int]] = None
     answer: Optional[str] = None
     latency_s: Dict[str, float] = field(default_factory=dict)
+    # tracing: when this item last entered a stage queue, on the tracer's
+    # clock (0.0 = untracked); each stage's per-item queue-wait span runs
+    # from here to its batch's service start
+    t_enq: float = 0.0
 
 
 @dataclass
@@ -155,10 +159,11 @@ class StagedExecutor:
     def __init__(self, pipeline: RAGPipeline,
                  batch_sizes: Optional[Dict[str, int]] = None,
                  default_batch: int = 8, queue_capacity: int = 64,
-                 coalesce_wait_s: float = 0.005):
+                 coalesce_wait_s: float = 0.005, tracer=None):
         assert default_batch >= 1 and queue_capacity >= 1
         self.pipeline = pipeline
         self.coalesce_wait_s = coalesce_wait_s
+        self.tracer = tracer              # optional obs.Tracer
         self.stages: List[Stage] = list(pipeline.stages)
         over = batch_sizes or {}
         self.batch_sizes = {
@@ -211,12 +216,26 @@ class StagedExecutor:
     def _run_batch(self, stage: Stage, stats: StageStats,
                    items: List[_Item], out_q: queue.Queue) -> None:
         qb = _batch_from_items(items)
+        tr = self.tracer
+        if tr is not None:
+            t_svc = tr.now()
+            for it in items:
+                if it.t_enq > 0.0:
+                    tr.add_span(f"{stage.name}.queue", it.t_enq, t_svc,
+                                cat="queue", tid=stage.name, req=it.idx)
         t0 = time.perf_counter()
         qb = stage.run(qb)
-        stats.busy_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        stats.busy_s += dt
         stats.n_batches += 1
         stats.n_items += len(items)
         _scatter_to_items(qb, items)
+        if tr is not None:
+            te = tr.now()
+            for it in items:
+                tr.add_span(stage.name, te - dt, te, cat="service",
+                            tid=stage.name, req=it.idx, n=len(items))
+                it.t_enq = te
         t1 = time.perf_counter()
         # batch-granular handoff downstream
         self._put_abortable(out_q, items)
@@ -283,10 +302,12 @@ class StagedExecutor:
             ground_truth: Optional[Sequence[str]] = None,
             gold_chunks: Optional[Sequence[List[int]]] = None) -> StagedResult:
         n = len(questions)
+        t_enq = self.tracer.now() if self.tracer is not None else 0.0
         items = [
             _Item(idx=i, question=q,
                   ground_truth=ground_truth[i] if ground_truth else "",
-                  gold=list(gold_chunks[i]) if gold_chunks else [])
+                  gold=list(gold_chunks[i]) if gold_chunks else [],
+                  t_enq=t_enq)
             for i, q in enumerate(questions)]
         workers = [threading.Thread(target=self._worker, args=(i,),
                                     name=f"ragperf-stage-{s.name}")

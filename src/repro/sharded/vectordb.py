@@ -131,6 +131,8 @@ class ShardedVectorDB(DBInstance):
         # device arrays valid for one mutation epoch
         self._mesh_fns: Dict[Tuple[int, int], Tuple[Callable, int]] = {}
         self._mesh_arrays: Optional[Tuple[int, object, object]] = None
+        # optional obs.Tracer: fan-out/merge spans on the "db" thread lane
+        self.tracer = None
 
     def _shard_cfg(self) -> DBConfig:
         """Derive one shard's ``DBConfig`` from the global view.
@@ -234,19 +236,32 @@ class ShardedVectorDB(DBInstance):
         if out is None:
             out = self._merge_search(q, k, snaps)
         scores, idx = out
+        dt = time.perf_counter() - t0
         with self._mu:
             self.counters["searches"] += len(vectors)
-            self.counters["search_time_s"] += time.perf_counter() - t0
+            self.counters["search_time_s"] += dt
+        tr = self.tracer
+        if tr is not None:
+            te = tr.now()
+            tr.add_span("db.search", te - dt, te, cat="db", tid="db",
+                        n=len(vectors), k=k, shards=self.cfg.n_shards)
         return [SearchResult(chunk_ids=np.asarray(idx[i]),
                              scores=np.asarray(scores[i]))
                 for i in range(len(vectors))]
 
     def _merge_search(self, q, k: int, snaps) -> Tuple[np.ndarray, np.ndarray]:
         """Per-shard local top-k → global ids → pairwise merge reduction."""
+        tr = self.tracer
         per: List[Tuple[np.ndarray, np.ndarray]] = []
         for sid, (sh, snap) in enumerate(zip(self.shards, snaps)):
             kl = min(k, sh.cfg.capacity)
+            ts = time.perf_counter()
             s, i = sh._search_arrays(q, kl, snap)
+            if tr is not None:
+                dts = time.perf_counter() - ts
+                te = tr.now()
+                tr.add_span("db.shard_scan", te - dts, te, cat="db",
+                            tid="db", shard=sid)
             s, i = np.asarray(s), np.asarray(i)
             # flat scans keep dead-slot ids at NEG score; mask them out so
             # they never shadow a real winner from another shard
@@ -261,7 +276,12 @@ class ShardedVectorDB(DBInstance):
         s, gi = per[0]
         for s2, gi2 in per[1:]:   # cross-shard id ranges are disjoint, so
             s, gi = merge_topk(s, gi, s2, gi2, k)   # the vectorized path runs
-        self.counters["merge_time_s"] += time.perf_counter() - t0
+        dtm = time.perf_counter() - t0
+        self.counters["merge_time_s"] += dtm
+        if tr is not None:
+            te = tr.now()
+            tr.add_span("db.merge", te - dtm, te, cat="db", tid="db",
+                        shards=len(per))
         return s, gi
 
     def _mesh_search(self, q, k: int, snaps, epoch: int

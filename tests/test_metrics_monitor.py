@@ -1,15 +1,18 @@
 """Quality metrics exactness + monitor ring buffer / stage timer behaviour."""
 import os
 import tempfile
+import threading
 import time
 
 import numpy as np
+import pytest
 
 from repro.core.interfaces import StageTrace
 from repro.metrics.quality import (context_recall, factual_consistency,
                                    query_accuracy)
-from repro.monitor.monitor import (MonitorConfig, ResourceMonitor, RingBuffer,
-                                   StageTimer)
+from repro.monitor.monitor import (GAUGE_SCHEMA, MonitorConfig,
+                                   ResourceMonitor, RingBuffer, StageTimer,
+                                   gauge_family, gauges_schema)
 
 
 def _trace(answer, truth, retrieved, gold, reranked=None):
@@ -67,7 +70,8 @@ def test_monitor_samples_and_flushes():
     with tempfile.TemporaryDirectory() as d:
         out = os.path.join(d, "trace.json")
         mon = ResourceMonitor(MonitorConfig(interval_s=0.02, out_path=out))
-        mon.add_gauge("custom", lambda: 42.0)
+        with pytest.warns(DeprecationWarning):   # off-schema name (ad-hoc)
+            mon.add_gauge("custom", lambda: 42.0)
         mon.start()
         time.sleep(0.3)
         mon.stop()
@@ -88,3 +92,85 @@ def test_monitor_overhead_bounded():
     wall = time.perf_counter() - t0
     mon.stop()
     assert mon.probe_cost_s < 0.2 * wall
+
+
+def test_monitor_sampling_pushes_host_probes():
+    """Every sampling tick lands all five exact-name host probes."""
+    mon = ResourceMonitor(MonitorConfig(interval_s=0.01))
+    mon._sample_once()
+    time.sleep(0.05)      # let the cpu jiffy counters tick over
+    mon._sample_once()
+    exact = [k for k in GAUGE_SCHEMA if not k.endswith("_")]
+    for name in exact:
+        assert name in mon.buffers, name
+        assert mon.buffers[name].summary()["n"] >= 1
+    # rss is a real positive reading, and timestamps are monotone
+    t, v = mon.buffers["host_rss_bytes"].values()
+    assert v[-1] > 0
+    assert np.all(np.diff(t) >= 0)
+
+
+def test_add_gauges_merges_family():
+    """add_gauges registers a whole gauge family at once (the serving
+    harness's pattern) and later merges extend, not replace."""
+    mon = ResourceMonitor(MonitorConfig(interval_s=0.01))
+    mon.add_gauges({"serving_queue_depth": lambda: 3.0,
+                    "serving_in_flight": lambda: 1.0})
+    mon.add_gauges({"elastic_retrieval_replicas": lambda: 2.0})
+    assert set(mon.callbacks) == {"serving_queue_depth", "serving_in_flight",
+                                  "elastic_retrieval_replicas"}
+    mon._sample_once()
+    assert mon.buffers["serving_queue_depth"].summary()["last"] == 3.0
+    assert mon.buffers["elastic_retrieval_replicas"].summary()["last"] == 2.0
+
+
+def test_monitor_thread_safety_under_concurrent_gauge_updates():
+    """Gauges registered and mutated while the daemon samples: no sample
+    may be lost or torn, and registration mid-flight must not crash the
+    sampling loop (it iterates a snapshot of the callbacks)."""
+    mon = ResourceMonitor(MonitorConfig(interval_s=0.002))
+    counters = {"elastic_a": 0.0, "elastic_b": 0.0}
+    stop = threading.Event()
+
+    def bump(name):
+        while not stop.is_set():
+            counters[name] += 1.0
+
+    mon.add_gauge("elastic_a", lambda: counters["elastic_a"])
+    mon.start()
+    threads = [threading.Thread(target=bump, args=(n,), daemon=True)
+               for n in counters]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)
+    mon.add_gauge("elastic_b", lambda: counters["elastic_b"])  # mid-flight
+    time.sleep(0.15)
+    stop.set()
+    for t in threads:
+        t.join()
+    mon.stop()
+    for name in counters:
+        t, v = mon.buffers[name].values()
+        assert len(v) >= 1
+        assert np.all(np.diff(v) >= 0)     # monotone counter, never torn
+        assert np.all(np.diff(t) >= 0)
+
+
+def test_gauge_schema_families_and_lookup():
+    schema = gauges_schema()
+    assert schema == GAUGE_SCHEMA
+    schema["db_"] = "mutated"               # copy, not the module dict
+    assert GAUGE_SCHEMA["db_"] != "mutated"
+    assert gauge_family("host_rss_bytes") == "host_rss_bytes"
+    assert gauge_family("db_live") == "db_"
+    assert gauge_family("elastic_retrieval_queue_depth") == "elastic_"
+    assert gauge_family("custom") is None
+    assert gauge_family("rss_bytes") is None   # no accidental substring hit
+
+
+def test_off_schema_gauge_warns_but_still_records():
+    mon = ResourceMonitor(MonitorConfig(interval_s=0.01))
+    with pytest.warns(DeprecationWarning, match="naming schema"):
+        mon.add_gauge("adhoc_metric", lambda: 7.0)
+    mon._sample_once()
+    assert mon.buffers["adhoc_metric"].summary()["last"] == 7.0

@@ -1,0 +1,370 @@
+"""Observability layer: clocks, tracer thread-safety, exporters, the
+metrics registry, critical-path decomposition, sim-trace determinism, and
+executor span integration (lock-step batch spans, elastic retry spans)."""
+import json
+import os
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import PipelineConfig, RAGPipeline
+from repro.obs import (MetricsRegistry, STAGE_ORDER, Tracer, VirtualClock,
+                       WallClock, attach_pipeline, chrome_trace_doc,
+                       decomposition_summary, request_components,
+                       validate_chrome_trace, write_chrome_trace, write_jsonl)
+from repro.scenarios import ScenarioRunner
+from repro.scenarios.registry import golden_variant
+from repro.serving.elastic import ElasticExecutor
+from repro.workload.corpus import CorpusConfig, SyntheticCorpus
+from repro.workload.runner import gold_chunks_for
+
+# -- clocks -------------------------------------------------------------------
+
+
+def test_wall_clock_is_run_relative():
+    c = WallClock()
+    t0 = c.now()
+    assert t0 >= 0.0
+    assert c.now() >= t0
+    anchored = WallClock(anchor=0.0)
+    assert anchored.now() > 1.0          # perf_counter is way past 0 by now
+
+
+def test_virtual_clock_is_externally_driven():
+    c = VirtualClock()
+    assert c.now() == 0.0
+    c.set(12.5)
+    assert c.now() == 12.5
+    assert c.now() == 12.5               # no drift without set()
+
+
+# -- tracer -------------------------------------------------------------------
+
+
+def test_tracer_records_spans_and_instants():
+    tr = Tracer(clock=VirtualClock())
+    tr.add_span("retrieval", 1.0, 3.0, cat="service", tid="retrieval/r0",
+                req=7, replica=0, n=4)
+    tr.instant("gen.first_token", t=2.0, cat="gen", req=7)
+    (s,) = tr.spans()
+    assert (s.name, s.t0, s.t1, s.dur, s.req) == ("retrieval", 1.0, 3.0,
+                                                  2.0, 7)
+    assert s.args == {"replica": 0, "n": 4}
+    (e,) = tr.instants()
+    assert (e.name, e.t) == ("gen.first_token", 2.0)
+    assert len(tr) == 2
+    tr.clear()
+    assert len(tr) == 0
+
+
+def test_tracer_span_context_manager_times_block():
+    tr = Tracer(clock=WallClock())
+    with tr.span("work", cat="test"):
+        pass
+    (s,) = tr.spans()
+    assert s.name == "work" and s.t1 >= s.t0 >= 0.0
+
+
+def test_tracer_disabled_records_nothing():
+    tr = Tracer(enabled=False)
+    tr.add_span("x", 0.0, 1.0)
+    tr.instant("y")
+    with tr.span("z"):
+        pass
+    assert len(tr) == 0
+
+
+def test_tracer_instant_defaults_to_clock_now():
+    clk = VirtualClock(4.0)
+    tr = Tracer(clock=clk)
+    tr.instant("tick")
+    assert tr.instants()[0].t == 4.0
+
+
+def test_tracer_concurrent_recording_loses_nothing():
+    """The hot path is lock-free (GIL-atomic appends): hammer it from many
+    threads and every record must land."""
+    tr = Tracer(clock=WallClock())
+    n_threads, per = 8, 500
+
+    def work(tid):
+        for i in range(per):
+            tr.add_span(f"s{tid}", float(i), float(i + 1), tid=f"t{tid}")
+            tr.instant(f"i{tid}", t=float(i))
+
+    threads = [threading.Thread(target=work, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(tr.spans()) == n_threads * per
+    assert len(tr.instants()) == n_threads * per
+    by_tid = {}
+    for s in tr.spans():
+        by_tid[s.tid] = by_tid.get(s.tid, 0) + 1
+    assert all(v == per for v in by_tid.values())
+
+
+# -- exporters ----------------------------------------------------------------
+
+
+def _demo_tracer():
+    tr = Tracer(clock=VirtualClock())
+    tr.add_span("retrieval", 0.0, 0.5, cat="service", tid="retrieval/r0",
+                req=0, replica=0)
+    tr.add_span("request", 0.0, 1.0, cat="request", tid="request/query",
+                req=0, op="query", ok=True)
+    tr.instant("requeue", t=0.25, cat="retry", tid="retrieval", req=0)
+    return tr
+
+
+def test_chrome_trace_doc_is_valid_and_complete():
+    tr = _demo_tracer()
+    reg = MetricsRegistry()
+    reg.gauge_set("elastic_retrieval_replicas", 2.0, t=0.1)
+    reg.event("autoscale_scale_up", t=0.2, stage="retrieval")
+    doc = chrome_trace_doc(tr, reg)
+    assert validate_chrome_trace(doc) == []
+    phases = [e["ph"] for e in doc["traceEvents"]]
+    assert {"M", "X", "i", "C"} <= set(phases)
+    # every logical track got a thread_name metadata record
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"retrieval/r0", "request/query", "retrieval"} <= names
+    # µs timebase, request id surfaced in args
+    req_span = next(e for e in doc["traceEvents"]
+                    if e.get("name") == "request")
+    assert req_span["dur"] == pytest.approx(1e6)
+    assert req_span["args"]["req"] == 0
+
+
+def test_trace_files_round_trip(tmp_path=None):
+    tr = _demo_tracer()
+    with tempfile.TemporaryDirectory() as d:
+        path = write_chrome_trace(os.path.join(d, "t.json"), tr)
+        doc = json.load(open(path))
+        assert validate_chrome_trace(doc) == []
+        jl = write_jsonl(os.path.join(d, "t.jsonl"), tr)
+        rows = [json.loads(line) for line in open(jl)]
+        assert [r["type"] for r in rows] == ["span", "span", "instant"]
+        assert rows[1]["args"] == {"op": "query", "ok": True}
+
+
+def test_validator_rejects_malformed_docs():
+    assert validate_chrome_trace([]) != []
+    assert validate_chrome_trace({}) != []
+    assert validate_chrome_trace({"traceEvents": [{"name": "x"}]}) != []
+    bad_dur = {"traceEvents": [{"name": "x", "ph": "X", "ts": 0.0,
+                                "pid": 1, "tid": 1, "dur": -1.0}]}
+    assert any("dur" in e for e in validate_chrome_trace(bad_dur))
+
+
+# -- metrics registry ---------------------------------------------------------
+
+
+def test_registry_counters_accumulate_on_timeline():
+    reg = MetricsRegistry(clock=VirtualClock(1.0))
+    assert reg.counter_add("reqs") == 1.0
+    assert reg.counter_add("reqs", 2.0) == 3.0
+    assert reg.counter_value("reqs") == 3.0
+    pts = reg.series("reqs")
+    assert [p.value for p in pts] == [1.0, 3.0]
+    assert all(p.t == 1.0 and p.kind == "counter" for p in pts)
+
+
+def test_registry_histogram_summary():
+    reg = MetricsRegistry()
+    for v in range(1, 101):
+        reg.observe("lat_ms", float(v))
+    s = reg.histogram_summary("lat_ms")
+    assert s["n"] == 100.0
+    assert s["p50"] == pytest.approx(50.0, abs=1.0)
+    assert s["p99"] == pytest.approx(99.0, abs=1.5)
+    assert reg.histogram_names() == ["lat_ms"]
+    assert reg.histogram_summary("missing") == {"n": 0.0}
+
+
+def test_registry_absorbs_stage_rows_and_scale_events():
+    reg = MetricsRegistry()
+    reg.absorb_stage_rows([{"stage": "retrieval", "n_items": 12,
+                            "busy_s": 0.5}], t=2.0)
+    (p,) = reg.series("stage_retrieval_n_items")
+    assert (p.t, p.value) == (2.0, 12.0)
+    reg.absorb_scale_events([{"t_s": 3.0, "kind": "replicas",
+                              "stage": "retrieval", "value": 2}])
+    (ev,) = reg.series("autoscale_replicas")
+    assert ev.kind == "event" and ev.t == 3.0
+    assert ev.args["stage"] == "retrieval"
+    reg.absorb_gen_stats({"ttft_p95_ms": 12.0}, t=4.0)
+    assert reg.series("gen_ttft_p95_ms")[0].value == 12.0
+
+
+def test_registry_timeline_is_time_ordered():
+    reg = MetricsRegistry()
+    reg.gauge_set("a", 1.0, t=5.0)
+    reg.gauge_set("b", 2.0, t=1.0)
+    reg.event("c", t=3.0)
+    assert [p.name for p in reg.timeline()] == ["b", "c", "a"]
+
+
+# -- critical-path decomposition ---------------------------------------------
+
+
+def test_request_components_residual_queue():
+    split = request_components(0.3, {"retrieval": 0.1, "generation": 0.05})
+    assert split["queue"] == pytest.approx(0.15)
+    assert split["retrieval"] == 0.1
+    assert split["rerank"] == 0.0
+    # live-path jitter: service shares can sum past end-to-end; clamp at 0
+    assert request_components(0.1, {"retrieval": 0.2})["queue"] == 0.0
+
+
+def test_decomposition_summary_shape_and_values():
+    rows = [(0.010, {"retrieval": 0.004}),
+            (0.020, {"retrieval": 0.008})]
+    out = decomposition_summary(rows)
+    assert set(out) == {"queue"} | set(STAGE_ORDER)
+    assert out["retrieval"]["p95_ms"] == pytest.approx(8.0, rel=0.05)
+    assert out["queue"]["p50_ms"] > 0.0
+    empty = decomposition_summary([])
+    assert all(v == {"p50_ms": 0.0, "p95_ms": 0.0} for v in empty.values())
+
+
+# -- simulator: bit-deterministic spans --------------------------------------
+
+
+def _sim_trace(name="steady"):
+    spec = golden_variant(name)
+    tr = Tracer(clock=VirtualClock())
+    report = ScenarioRunner(spec).simulate(tracer=tr)
+    return tr, report
+
+
+def test_sim_spans_bit_deterministic_across_replays():
+    tr_a, rep_a = _sim_trace()
+    tr_b, rep_b = _sim_trace()
+    assert len(tr_a) == len(tr_b) > 0
+    assert tr_a.spans() == tr_b.spans()
+    assert tr_a.instants() == tr_b.instants()
+    assert rep_a.trace_decomposition == rep_b.trace_decomposition
+
+
+def test_sim_trace_covers_stages_and_requests():
+    tr, report = _sim_trace()
+    cats = {s.cat for s in tr.spans()}
+    assert {"queue", "service", "request"} <= cats
+    reqs = [s for s in tr.spans() if s.cat == "request"]
+    assert reqs and all(s.args.get("ok") for s in reqs)
+    # every request span closes after it opens, on virtual time
+    assert all(s.t1 >= s.t0 >= 0.0 for s in tr.spans())
+    # decomposition rides the report and covers the canonical components
+    assert set(report.trace_decomposition) == {"queue"} | set(STAGE_ORDER)
+    assert report.trace_decomposition["retrieval"]["p95_ms"] > 0.0
+
+
+def test_sim_trace_exports_as_valid_chrome_trace():
+    tr, _ = _sim_trace()
+    assert validate_chrome_trace(chrome_trace_doc(tr)) == []
+
+
+# -- executor integration -----------------------------------------------------
+
+
+def _small_rig(n_docs=16, seed=3):
+    corpus = SyntheticCorpus(CorpusConfig(n_docs=n_docs, seed=seed))
+    pipe = RAGPipeline(PipelineConfig(index_type="flat", capacity=1 << 12,
+                                      nlist=8, retrieve_k=6, rerank_k=2))
+    pipe.index_documents(corpus.all_documents())
+    rng = np.random.default_rng(seed)
+    qs, ans, golds = [], [], []
+    for d in range(n_docs):
+        q, a = corpus.question_for(d, rng)
+        qs.append(q)
+        ans.append(a)
+        golds.append(gold_chunks_for(pipe.db, d, a))
+    return pipe, qs, ans, golds
+
+
+def test_lockstep_attach_pipeline_emits_batch_spans():
+    pipe, qs, ans, golds = _small_rig()
+    tr = Tracer(clock=WallClock())
+    attach_pipeline(tr, pipe)
+    try:
+        pipe.query(qs[:4], ground_truth=ans[:4], gold_chunks=golds[:4])
+    finally:
+        attach_pipeline(None, pipe)
+        pipe.traces.clear()
+    names = [s.name for s in tr.spans()]
+    for stage in STAGE_ORDER:
+        assert stage in names
+    assert all(s.args.get("n") == 4 for s in tr.spans())
+
+
+def test_elastic_retry_accumulates_attempts_on_trace():
+    """Satellite: a failed attempt must surface — n_attempts on the request
+    trace, a requeue instant, the failed attempt's service span, and its
+    service time accumulated (not vanished) in the per-request latency."""
+    pipe, qs, ans, golds = _small_rig()
+    pipe.traces.clear()
+    tr = Tracer(clock=WallClock())
+    ex = ElasticExecutor(pipe, replicas={"retrieval": 1}, default_batch=4,
+                         max_retries=2, tracer=tr)
+    original = ex.stages[1]._apply
+    state = {"boomed": False}
+
+    class _Flaky(Exception):
+        pass
+
+    def flaky(batch):
+        if not state["boomed"]:
+            state["boomed"] = True
+            raise _Flaky("transient retrieval fault")
+        return original(batch)
+
+    ex.stages[1]._apply = flaky
+    try:
+        res = ex.run(qs, ground_truth=ans, gold_chunks=golds)
+    finally:
+        ex.stages[1]._apply = original
+        pipe.traces.clear()
+    assert res.n_retried > 0
+    retried = [t for t in res.traces if t.n_attempts > 1]
+    assert retried and all(t.n_attempts == 2 for t in retried)
+    requeues = [e for e in tr.instants() if e.name == "requeue"]
+    assert requeues and all(e.args["attempt"] == 1 for e in requeues)
+    failed = [s for s in tr.spans()
+              if s.cat == "service" and "error" in s.args]
+    assert failed and all(s.args["error"] == "_Flaky" for s in failed)
+    # retried requests carry >= 2 retrieval service spans (both attempts)
+    rid = requeues[0].req
+    svc = [s for s in tr.spans()
+           if s.cat == "service" and s.name == "retrieval" and s.req == rid]
+    assert len(svc) >= 2
+    # and the queue span re-anchors at requeue time, not first submission
+    queue_spans = [s for s in tr.spans()
+                   if s.cat == "queue" and s.name == "retrieval.queue"
+                   and s.req == rid]
+    assert len(queue_spans) >= 2
+
+
+def test_elastic_request_spans_cover_all_queries():
+    pipe, qs, ans, golds = _small_rig()
+    pipe.traces.clear()
+    tr = Tracer(clock=WallClock())
+    ex = ElasticExecutor(pipe, replicas={"retrieval": 2}, default_batch=4,
+                         tracer=tr)
+    try:
+        ex.run(qs, ground_truth=ans, gold_chunks=golds)
+    finally:
+        pipe.traces.clear()
+    svc = [s for s in tr.spans() if s.cat == "service"]
+    assert {s.name for s in svc} == set(STAGE_ORDER)
+    assert all("replica" in s.args and "attempt" in s.args for s in svc)
+    per_req = {}
+    for s in svc:
+        per_req.setdefault(s.req, set()).add(s.name)
+    assert all(v == set(STAGE_ORDER) for v in per_req.values())
+    assert len(per_req) == len(qs)
