@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Invariant lint gate: run the static analysis passes against the committed
+# baseline.  Extra args pass through (e.g. --json, --update-baseline, paths).
+# Usage: scripts/lint.sh [args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m repro.analysis --check "$@"

@@ -8,6 +8,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest (fast: -m 'not slow') =="
 python -m pytest -x -q -m "not slow"
 
+echo "== tier-1: invariant lint (repro.analysis --check) =="
+# static passes: clock-purity, lock-discipline, conformance, gauge-schema;
+# fails only on findings not in the committed analysis-baseline.json
+python -m repro.analysis --check > /dev/null
+
 echo "== tier-1: serving benchmark smoke =="
 python -m benchmarks.serving --smoke > /dev/null
 

@@ -66,10 +66,10 @@ class GenStats:
     *real* requests are recorded — jit-padding rows never reach ``record``.
     """
 
-    ttft_s: List[float] = field(default_factory=list)
-    tpot_s: List[float] = field(default_factory=list)
-    tokens_out: int = 0
-    n_requests: int = 0
+    ttft_s: List[float] = field(default_factory=list)   # guarded-by: _lock
+    tpot_s: List[float] = field(default_factory=list)   # guarded-by: _lock
+    tokens_out: int = 0                                 # guarded-by: _lock
+    n_requests: int = 0                                 # guarded-by: _lock
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False, compare=False)
 

@@ -87,14 +87,38 @@ def create(kind: str, name: str, _context: Optional[Dict[str, Any]] = None,
     explicit option.
     """
     factory = get_factory(kind, name)
-    if _context:
-        try:
-            params = inspect.signature(factory).parameters
-        except (TypeError, ValueError):
-            params = {}
+    try:
+        params = inspect.signature(factory).parameters
+    except (TypeError, ValueError):
+        params = None
+    if _context and params is not None:
         for key, val in _context.items():
             if key in params and key not in options:
                 options[key] = val
+    if params is not None:
+        # Surface construction mistakes as registry errors naming the
+        # component and the offending key, instead of the raw TypeError
+        # from the factory's Python signature.
+        has_var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                         for p in params.values())
+        if not has_var_kw:
+            unexpected = sorted(k for k in options if k not in params)
+            if unexpected:
+                raise RegistryError(
+                    f"cannot construct {kind} component {name!r}: "
+                    f"unexpected option(s) {unexpected}; accepted: "
+                    f"{sorted(k for k in params if k != 'self')}")
+        missing = sorted(
+            pname for pname, p in params.items()
+            if pname not in options and pname != "self"
+            and p.default is inspect.Parameter.empty
+            and p.kind in (inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                           inspect.Parameter.KEYWORD_ONLY))
+        if missing:
+            raise RegistryError(
+                f"cannot construct {kind} component {name!r}: missing "
+                f"required argument(s) {missing}; pass them as options or "
+                f"provide a _context entry with that key")
     return factory(**options)
 
 

@@ -216,22 +216,22 @@ class JaxVectorDB(DBInstance):
         self.cfg = cfg
         self._mu = threading.RLock()   # serializes mutations vs snapshots
         d, cap = cfg.dim, cfg.capacity
-        self.vectors = np.zeros((cap, d), dtype=np.float32)
-        self.live = np.zeros((cap,), dtype=bool)
-        self.n_slots = 0                       # high-water mark
-        self.chunks: Dict[int, Chunk] = {}     # slot -> payload
-        self.doc_slots: Dict[int, List[int]] = {}
+        self.vectors = np.zeros((cap, d), dtype=np.float32)  # guarded-by: _mu
+        self.live = np.zeros((cap,), dtype=bool)             # guarded-by: _mu
+        self.n_slots = 0                       # guarded-by: _mu
+        self.chunks: Dict[int, Chunk] = {}     # guarded-by: _mu
+        self.doc_slots: Dict[int, List[int]] = {}   # guarded-by: _mu
         # main-index state
-        self.centroids: Optional[np.ndarray] = None
-        self.buckets: Optional[np.ndarray] = None
-        self.bucket_live: Optional[np.ndarray] = None
-        self.indexed = np.zeros((cap,), dtype=bool)   # covered by main index
-        self.sq_codes: Optional[np.ndarray] = None
-        self.sq_scale: Optional[np.ndarray] = None
-        self.pq_codes: Optional[np.ndarray] = None
-        self.pq_codebook: Optional[np.ndarray] = None
+        self.centroids: Optional[np.ndarray] = None      # guarded-by: _mu
+        self.buckets: Optional[np.ndarray] = None        # guarded-by: _mu
+        self.bucket_live: Optional[np.ndarray] = None    # guarded-by: _mu
+        self.indexed = np.zeros((cap,), dtype=bool)      # guarded-by: _mu
+        self.sq_codes: Optional[np.ndarray] = None       # guarded-by: _mu
+        self.sq_scale: Optional[np.ndarray] = None       # guarded-by: _mu
+        self.pq_codes: Optional[np.ndarray] = None       # guarded-by: _mu
+        self.pq_codebook: Optional[np.ndarray] = None    # guarded-by: _mu
         # profiling counters (read by the monitor)
-        self.counters: Dict[str, float] = {
+        self.counters: Dict[str, float] = {   # guarded-by: _mu
             "inserts": 0, "removals": 0, "searches": 0, "rebuilds": 0,
             "insert_time_s": 0.0, "build_time_s": 0.0, "search_time_s": 0.0,
             "flat_fill": 0.0,
@@ -296,14 +296,14 @@ class JaxVectorDB(DBInstance):
 
     # -- index build -------------------------------------------------------
 
-    def _main_built(self) -> bool:
+    def _main_built(self) -> bool:  # locked-by: _mu
         return self.cfg.index_type == "flat" or self.centroids is not None
 
     def build_index(self) -> None:
         with self._mu:
             self._build_index_locked()
 
-    def _build_index_locked(self) -> None:
+    def _build_index_locked(self) -> None:  # locked-by: _mu
         t0 = time.perf_counter()
         cfg = self.cfg
         live_idx = np.nonzero(self.live)[0]
@@ -348,7 +348,7 @@ class JaxVectorDB(DBInstance):
         self.counters["rebuilds"] += 1
         self.counters["build_time_s"] += time.perf_counter() - t0
 
-    def _train_sq(self):
+    def _train_sq(self):  # locked-by: _mu
         live_idx = np.nonzero(self.live)[0]
         x = self.vectors[: self.n_slots]
         scale = np.abs(x[live_idx]).max(axis=0) / 127.0 + 1e-12 \
@@ -359,7 +359,7 @@ class JaxVectorDB(DBInstance):
             np.round(x / scale), -127, 127).astype(np.int8)
         self.sq_codes = codes
 
-    def _train_pq(self, live_idx):
+    def _train_pq(self, live_idx):  # locked-by: _mu
         cfg = self.cfg
         m, dsub = cfg.pq_m, cfg.dim // cfg.pq_m
         x = self.vectors[live_idx] if len(live_idx) else self.vectors[:1]
@@ -374,7 +374,7 @@ class JaxVectorDB(DBInstance):
         self.pq_codebook = cb
         self.pq_codes = codes
 
-    def _maybe_rebuild(self):
+    def _maybe_rebuild(self):  # locked-by: _mu
         # only called with self._mu held (insert path)
         fresh = int((self.live & ~self.indexed).sum())
         self.counters["flat_fill"] = fresh / max(self.cfg.flat_capacity, 1)
@@ -473,18 +473,19 @@ class JaxVectorDB(DBInstance):
     # -- misc --------------------------------------------------------------
 
     def get_chunk(self, chunk_id: int) -> Optional[Chunk]:
-        return self.chunks.get(int(chunk_id))
+        with self._mu:
+            return self.chunks.get(int(chunk_id))
 
     def get_chunks(self, chunk_ids: Sequence[int]) -> List[Optional[Chunk]]:
         """Batched payload lookup: one call for a whole candidate set."""
-        chunks = self.chunks
-        return [chunks.get(int(c)) for c in chunk_ids]
+        with self._mu:
+            return [self.chunks.get(int(c)) for c in chunk_ids]
 
     def stats(self) -> Dict[str, float]:
         with self._mu:
             return self._stats_locked()
 
-    def _stats_locked(self) -> Dict[str, float]:
+    def _stats_locked(self) -> Dict[str, float]:  # locked-by: _mu
         cfg = self.cfg
         vec_bytes = self.n_slots * cfg.dim * 4
         index_bytes = 0

@@ -283,9 +283,9 @@ class StageTimer:
     """
 
     def __init__(self):
-        self.totals: Dict[str, float] = {}
-        self.counts: Dict[str, int] = {}
-        self.series: Dict[str, List[float]] = {}
+        self.totals: Dict[str, float] = {}        # guarded-by: _lock
+        self.counts: Dict[str, int] = {}          # guarded-by: _lock
+        self.series: Dict[str, List[float]] = {}  # guarded-by: _lock
         self._lock = threading.Lock()
 
     class _Ctx:
@@ -309,7 +309,10 @@ class StageTimer:
         return self._Ctx(self, name)
 
     def breakdown(self) -> Dict[str, float]:
-        return dict(self.totals)
+        with self._lock:
+            return dict(self.totals)
 
     def mean(self, name: str) -> float:
-        return self.totals.get(name, 0.0) / max(self.counts.get(name, 0), 1)
+        with self._lock:
+            return (self.totals.get(name, 0.0)
+                    / max(self.counts.get(name, 0), 1))

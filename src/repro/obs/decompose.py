@@ -10,6 +10,7 @@ spent waiting in stage queues, coalescing buffers, or the batcher).
 p50/p95 table that ``ScenarioReport.trace_decomposition`` pins in the golden
 traces — RAGO-style stage attribution as a regression-gated number.
 """
+# analysis: deterministic -- pure attribution math over recorded traces
 from __future__ import annotations
 
 from typing import Dict, Iterable, List, Sequence, Tuple

@@ -7,6 +7,7 @@ schema.  The registry absorbs all of them as ``MetricPoint``s on a single
 timeline (the tracer's clock), so a controller decision lands next to the
 request spans it caused and one exporter renders everything.
 """
+# analysis: deterministic -- timestamps come only from the injected clock
 from __future__ import annotations
 
 import threading
@@ -42,9 +43,9 @@ class MetricsRegistry:
 
     def __init__(self, clock=None):
         self.clock = clock
-        self._points: List[MetricPoint] = []
-        self._counters: Dict[str, float] = {}
-        self._hist: Dict[str, List[float]] = {}
+        self._points: List[MetricPoint] = []      # guarded-by: _lock
+        self._counters: Dict[str, float] = {}     # guarded-by: _lock
+        self._hist: Dict[str, List[float]] = {}   # guarded-by: _lock
         self._lock = threading.Lock()
 
     def _now(self, t: Optional[float]) -> float:

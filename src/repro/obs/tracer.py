@@ -38,7 +38,7 @@ class WallClock:
         return time.perf_counter() - self.anchor
 
 
-class VirtualClock:
+class VirtualClock:  # deterministic
     """Externally-driven clock for the deterministic simulator."""
 
     def __init__(self, t: float = 0.0):

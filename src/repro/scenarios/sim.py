@@ -34,6 +34,7 @@ events land in the same golden-pinned stream as scaling); a ``writer_stall``
 freezes the serialized writer and lets the backlog drain on resume.  All of
 it is heap events, so recovery timelines are bit-deterministic.
 """
+# analysis: deterministic -- the golden-trace engine: virtual time only
 from __future__ import annotations
 
 import heapq

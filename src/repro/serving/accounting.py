@@ -67,7 +67,7 @@ class LatencyAccountant:
 
     def __init__(self, slo_ms: Optional[float] = None):
         self.slo_ms = slo_ms
-        self.records: List[RequestRecord] = []
+        self.records: List[RequestRecord] = []   # guarded-by: _lock
         self._lock = threading.Lock()
 
     def observe(self, rec: RequestRecord) -> None:
@@ -75,7 +75,9 @@ class LatencyAccountant:
             self.records.append(rec)
 
     def _by_op(self, op: str) -> List[RequestRecord]:
-        return [r for r in self.records if r.op == op and r.ok]
+        with self._lock:
+            recs = list(self.records)
+        return [r for r in recs if r.op == op and r.ok]
 
     def latencies_ms(self, op: str = "query") -> List[float]:
         return [r.latency_s * 1e3 for r in self._by_op(op)]

@@ -33,7 +33,7 @@ from repro.core.spec import AutoscaleSpec
 from repro.serving.elastic import ElasticExecutor
 
 
-def default_ladder(nprobe: int, rerank_k: int, max_new: int = 0
+def default_ladder(nprobe: int, rerank_k: int, max_new: int = 0  # deterministic
                    ) -> List[Tuple[int, ...]]:
     """Quality ladder from the configured knobs down to the cheapest step:
     halve ``nprobe`` first (retrieval cost is the steep axis), then
@@ -224,7 +224,7 @@ class AutoscaleController:
 
     # -- the control step ---------------------------------------------------
 
-    def step(self, snap: Snapshot) -> List[ScaleEvent]:
+    def step(self, snap: Snapshot) -> List[ScaleEvent]:  # deterministic
         """One control decision round; returns (and records) the events."""
         self.snapshots.append(snap)
         prev, self._prev = self._prev, snap
@@ -255,7 +255,7 @@ class AutoscaleController:
         self.events.extend(out)
         return out
 
-    def _retire_stragglers(self, snap: Snapshot) -> List[ScaleEvent]:
+    def _retire_stragglers(self, snap: Snapshot) -> List[ScaleEvent]:  # deterministic
         """Recovery action: a (stage, rid) flagged in the snapshot is
         retired — killed and replaced by a fresh replica — exactly once
         (``_retired`` is controller state, so replay reproduces it)."""
@@ -271,10 +271,10 @@ class AutoscaleController:
                 self.executor.retire_replica(stage, rid)
         return out
 
-    def _backlog(self, s: StageSample) -> float:
+    def _backlog(self, s: StageSample) -> float:  # deterministic
         return s.queue_depth / max(s.replicas, 1)
 
-    def _scale_replicas(self, snap: Snapshot,
+    def _scale_replicas(self, snap: Snapshot,  # deterministic
                         occ: Dict[str, float]) -> List[ScaleEvent]:
         cfg = self.cfg
         out: List[ScaleEvent] = []
@@ -316,7 +316,7 @@ class AutoscaleController:
                 break
         return out
 
-    def _scale_batches(self, snap: Snapshot,
+    def _scale_batches(self, snap: Snapshot,  # deterministic
                        occ: Dict[str, float]) -> List[ScaleEvent]:
         cfg = self.cfg
         out: List[ScaleEvent] = []
@@ -341,7 +341,7 @@ class AutoscaleController:
                     self.executor.set_batch_size(s.name, new)
         return out
 
-    def _walk_ladder(self, snap: Snapshot) -> List[ScaleEvent]:
+    def _walk_ladder(self, snap: Snapshot) -> List[ScaleEvent]:  # deterministic
         cfg = self.cfg
         if not cfg.ladder or self._knob_wait > 0 or snap.p95_ms <= 0.0:
             return []
@@ -370,7 +370,7 @@ class AutoscaleController:
 
     # -- reporting ----------------------------------------------------------
 
-    def replay_events(self) -> List[ScaleEvent]:
+    def replay_events(self) -> List[ScaleEvent]:  # deterministic
         """Re-run the recorded snapshot sequence through a *fresh*
         controller (no executor attached) and return its event stream.
 
@@ -383,10 +383,10 @@ class AutoscaleController:
             twin.step(snap)
         return twin.events
 
-    def event_dicts(self) -> List[Dict[str, object]]:
+    def event_dicts(self) -> List[Dict[str, object]]:  # deterministic
         return [e.to_dict() for e in self.events]
 
-    def knob_timeline(self) -> List[Dict[str, object]]:
+    def knob_timeline(self) -> List[Dict[str, object]]:  # deterministic
         """The quality-degradation timeline: (t, level, nprobe, rerank_k
         [, max_new])."""
         out = []

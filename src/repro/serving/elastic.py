@@ -133,20 +133,20 @@ class ElasticExecutor:
         self.coalesce_wait_s = coalesce_wait_s
         self.mutation_batch = mutation_batch
         over = batch_sizes or {}
-        self.batch_sizes: Dict[str, int] = {
+        self.batch_sizes: Dict[str, int] = {  # guarded-by: _lock
             s.name: int(over.get(s.name, 0) or s.batch_size or default_batch)
             for s in self.stages}
         self.base_batch_sizes = dict(self.batch_sizes)
         rep = replicas or {}
         self._stage_idx = {s.name: i for i, s in enumerate(self.stages)}
         self._target = [max(1, min(int(rep.get(s.name, 1)), max_replicas))
-                        for s in self.stages]
+                        for s in self.stages]   # guarded-by: _lock
         # per-replica stage instances: each worker checks one out of the
         # pool; stages over shared thread-safe components hand back ``self``
         # from replica_copy, while the generation stage clones a warm engine
         # per worker (own KV slot pool, shared params + thread-safe GenStats)
-        self._stage_pool: List[List] = [[s] for s in self.stages]
-        self._stage_instances: List[List] = [[s] for s in self.stages]
+        self._stage_pool: List[List] = [[s] for s in self.stages]  # guarded-by: _lock
+        self._stage_instances: List[List] = [[s] for s in self.stages]  # guarded-by: _lock
         self.stats = [StageStats(name=s.name, replicas=self._target[i])
                       for i, s in enumerate(self.stages)]
         self.queues: List[queue.Queue] = [
@@ -155,20 +155,20 @@ class ElasticExecutor:
         # _closed[i]: no further put to queues[i] will ever happen
         self._closed = [threading.Event()
                         for _ in range(len(self.stages) + 1)]
-        self._active = [0] * len(self.stages)
-        self._shrink = [0] * len(self.stages)
+        self._active = [0] * len(self.stages)   # guarded-by: _lock
+        self._shrink = [0] * len(self.stages)   # guarded-by: _lock
         self._lock = threading.Lock()
         self._abort = threading.Event()
-        self._error: Optional[BaseException] = None
-        self._threads: List[threading.Thread] = []
+        self._error: Optional[BaseException] = None   # guarded-by: _lock
+        self._threads: List[threading.Thread] = []    # guarded-by: _lock
         self._started = False
         # failure isolation / chaos surface
         self.max_retries = max_retries
-        self._ctl: List[Dict[int, _ReplicaCtl]] = [
+        self._ctl: List[Dict[int, _ReplicaCtl]] = [  # guarded-by: _lock
             {} for _ in self.stages]          # alive replicas by rid
-        self._next_rid = [0] * len(self.stages)
-        self.n_failed = 0
-        self.n_retried = 0
+        self._next_rid = [0] * len(self.stages)   # guarded-by: _lock
+        self.n_failed = 0    # guarded-by: _lock
+        self.n_retried = 0   # guarded-by: _lock
         # per-replica service-time tracking (straggler detection); tolerance
         # 0 disables flagging but per-replica recording stays cheap and on
         self.straggler_tolerance = straggler_tolerance
@@ -181,18 +181,18 @@ class ElasticExecutor:
         self._wq: "queue.Queue[Tuple[Request, Optional[Callable]]]" = \
             queue.Queue(maxsize=queue_capacity)
         self._writer_closed = threading.Event()
-        self._writer_resume_t: Optional[float] = None   # injected stall
-        self.write_batches: List[int] = []
-        self.mutations_applied = 0
-        self.mutations_failed = 0
+        self._writer_resume_t: Optional[float] = None   # guarded-by: _lock
+        self.write_batches: List[int] = []   # guarded-by: _lock
+        self.mutations_applied = 0           # guarded-by: _lock
+        self.mutations_failed = 0            # guarded-by: _lock
         # completion tracking
-        self._done: List[_ElasticItem] = []
-        self._next_idx = 0
-        self._recent_ms: List[float] = []     # rolling completion latencies
+        self._done: List[_ElasticItem] = []  # guarded-by: _lock
+        self._next_idx = 0                   # guarded-by: _lock
+        self._recent_ms: List[float] = []    # guarded-by: _lock
         self._recent_cap = 512
-        self.n_completed = 0
+        self.n_completed = 0                 # guarded-by: _lock
         # knob state (current values surfaced as gauges / snapshot)
-        self.knobs: Dict[str, int] = self._read_knobs()
+        self.knobs: Dict[str, int] = self._read_knobs()   # guarded-by: _lock
 
     # -- knob plumbing ------------------------------------------------------
 
@@ -217,11 +217,16 @@ class ElasticExecutor:
         for st in self.stages:
             if nprobe is not None and isinstance(st, RetrieveStage) \
                     and hasattr(st.db, "set_nprobe"):
+                # knob applied to the component outside the executor lock
+                # (set_nprobe takes the DB's own lock; nesting would impose
+                # a _lock -> _mu order the search path need not share)
                 st.db.set_nprobe(nprobe)
-                self.knobs["nprobe"] = max(1, int(nprobe))
+                with self._lock:
+                    self.knobs["nprobe"] = max(1, int(nprobe))
             if rerank_k is not None and isinstance(st, RerankStage):
                 st.rerank_k = max(1, int(rerank_k))
-                self.knobs["rerank_k"] = max(1, int(rerank_k))
+                with self._lock:
+                    self.knobs["rerank_k"] = max(1, int(rerank_k))
         if max_new is not None:
             si = self._stage_idx.get(GenerateStage.name)
             if si is not None:
@@ -232,12 +237,14 @@ class ElasticExecutor:
                     if hasattr(st.llm, "set_max_new"):
                         applied = st.llm.set_max_new(max_new)
                 if applied:
-                    self.knobs["max_new"] = applied
+                    with self._lock:
+                        self.knobs["max_new"] = applied
 
     # -- scaling surface ----------------------------------------------------
 
     def replicas_of(self, stage_name: str) -> int:
-        return self._target[self._stage_idx[stage_name]]
+        with self._lock:
+            return self._target[self._stage_idx[stage_name]]
 
     def set_replicas(self, stage_name: str, n: int) -> int:
         """Grow/shrink a stage's pool; returns the clamped applied target."""
@@ -262,7 +269,8 @@ class ElasticExecutor:
 
     def set_batch_size(self, stage_name: str, bs: int) -> int:
         bs = max(1, int(bs))
-        self.batch_sizes[stage_name] = bs
+        with self._lock:
+            self.batch_sizes[stage_name] = bs
         return bs
 
     # -- chaos surface (fault injection + recovery) -------------------------
@@ -328,7 +336,9 @@ class ElasticExecutor:
     def stall_writer(self, duration_s: float) -> None:
         """Freeze the serialized mutation writer for ``duration_s`` —
         pending mutations back up, then drain on resume."""
-        self._writer_resume_t = time.perf_counter() + max(0.0, duration_s)
+        with self._lock:
+            self._writer_resume_t = \
+                time.perf_counter() + max(0.0, duration_s)
 
     def retire_replica(self, stage_name: str, rid: int) -> int:
         """Controller-driven recovery: kill a flagged replica and spawn a
@@ -368,15 +378,17 @@ class ElasticExecutor:
             out[f"elastic_{stage.name}_queue_depth"] = \
                 (lambda q=q: float(q.qsize()))
             out[f"elastic_{stage.name}_replicas"] = \
-                (lambda si=si: float(self._target[si]))
+                (lambda si=si: float(self._target[si]))  # noqa: lock-discipline -- monitor-only sample; int read is GIL-atomic and a stale width is fine for a gauge
         out["elastic_write_queue_depth"] = lambda: float(self._wq.qsize())
         for stage in self.stages:
             db = getattr(stage, "db", None)
             if db is not None and hasattr(db, "gauges"):
                 out.update(db.gauges())   # sharded backend: balance/shards
-        out["elastic_nprobe"] = lambda: float(self.knobs["nprobe"])
-        out["elastic_rerank_k"] = lambda: float(self.knobs["rerank_k"])
-        out["elastic_max_new"] = lambda: float(self.knobs.get("max_new", 0))
+        # monitor-only samples: single dict reads are GIL-atomic and a
+        # one-interval-stale knob value cannot mislead the timeline
+        out["elastic_nprobe"] = lambda: float(self.knobs["nprobe"])  # noqa: lock-discipline
+        out["elastic_rerank_k"] = lambda: float(self.knobs["rerank_k"])  # noqa: lock-discipline
+        out["elastic_max_new"] = lambda: float(self.knobs.get("max_new", 0))  # noqa: lock-discipline
         return out
 
     def snapshot(self) -> List[Dict[str, float]]:
@@ -409,20 +421,23 @@ class ElasticExecutor:
         # warm-pool init: build every initial replica's stage instance (for
         # generation: engine + KV slot pool) *before* traffic, so scale-out
         # at admission time never pays construction cost on the data path
-        for si in range(len(self.stages)):
-            self._warm_pool(si, self._target[si])
+        with self._lock:
+            widths = list(self._target)
+        for si, width in enumerate(widths):
+            self._warm_pool(si, width)
         with self._lock:
             for si in range(len(self.stages)):
                 for _ in range(self._target[si]):
                     self._spawn_worker_locked(si)
-        for target, name in ((self._collector, "ragperf-elastic-sink"),
-                             (self._writer_loop, "ragperf-elastic-writer")):
-            t = threading.Thread(target=target, name=name)
-            t.start()
-            self._threads.append(t)
+            for target, name in ((self._collector, "ragperf-elastic-sink"),
+                                 (self._writer_loop,
+                                  "ragperf-elastic-writer")):
+                t = threading.Thread(target=target, name=name)
+                t.start()
+                self._threads.append(t)
         return self
 
-    def _spawn_worker_locked(self, si: int) -> int:
+    def _spawn_worker_locked(self, si: int) -> int:  # locked-by: _lock
         rid = self._next_rid[si]
         self._next_rid[si] += 1
         self._ctl[si][rid] = _ReplicaCtl(rid=rid)
@@ -484,8 +499,10 @@ class ElasticExecutor:
                 stable = len(self._threads) == len(threads)
             if stable and not any(t.is_alive() for t in threads):
                 break
-        if self._error is not None:
-            raise self._error
+        with self._lock:
+            err = self._error
+        if err is not None:
+            raise err
 
     def _propagate_closure(self) -> None:
         """Drain-time safety net: a closed stage whose pool emptied (chaos
@@ -513,7 +530,8 @@ class ElasticExecutor:
     @property
     def error(self) -> Optional[BaseException]:
         """First run-level error (None while healthy)."""
-        return self._error
+        with self._lock:
+            return self._error
 
     # -- submission ---------------------------------------------------------
 
@@ -534,9 +552,9 @@ class ElasticExecutor:
         if not self._put_abortable(self.queues[0], item):
             # aborted executor: never silently drop — the caller must still
             # see a terminal state for this request
-            item.error = self._error or RuntimeError(
-                "ElasticExecutor aborted; request rejected")
             with self._lock:
+                item.error = self._error or RuntimeError(
+                    "ElasticExecutor aborted; request rejected")
                 self.n_failed += 1
             if on_done is not None:
                 on_done(item)
@@ -551,9 +569,9 @@ class ElasticExecutor:
         """Enqueue an index mutation onto the serialized writer path."""
         assert req.op in ("insert", "update", "removal"), req.op
         if not self._put_abortable(self._wq, (req, on_done)):
-            err = self._error or RuntimeError(
-                "ElasticExecutor aborted; mutation rejected")
             with self._lock:
+                err = self._error or RuntimeError(
+                    "ElasticExecutor aborted; mutation rejected")
                 self.mutations_failed += 1
             if on_done is not None:
                 on_done(err)
@@ -676,7 +694,8 @@ class ElasticExecutor:
                 with self._lock:
                     stats.idle_s += time.perf_counter() - t_wait
                 items = [first]
-                bs = self.batch_sizes[stage.name]
+                with self._lock:
+                    bs = self.batch_sizes[stage.name]
                 tr = self.tracer
                 t_co = tr.now() if tr is not None else 0.0
                 # deadline-triggered coalescing from the *shared* queue: wait
@@ -810,12 +829,14 @@ class ElasticExecutor:
     def _wait_writer_stall(self) -> bool:
         """Sleep out an injected writer stall; False means abort observed."""
         while True:
-            resume = self._writer_resume_t
+            with self._lock:
+                resume = self._writer_resume_t
+                if resume is not None:
+                    left = resume - time.perf_counter()
+                    if left <= 0:
+                        self._writer_resume_t = None
+                        resume = None
             if resume is None:
-                return True
-            left = resume - time.perf_counter()
-            if left <= 0:
-                self._writer_resume_t = None
                 return True
             if self._abort.is_set():
                 return False
@@ -854,8 +875,8 @@ class ElasticExecutor:
                         "writer.apply", te - dt, te, cat="writer",
                         tid="writer", n=len(batch),
                         failed=sum(1 for e in errs if e is not None))
-                self.write_batches.append(len(batch))
                 with self._lock:
+                    self.write_batches.append(len(batch))
                     self.mutations_applied += \
                         sum(1 for e in errs if e is None)
                     self.mutations_failed += \
@@ -951,7 +972,12 @@ class ElasticExecutor:
                         gold=list(gold_chunks[i]) if gold_chunks else [])
         self.drain()
         wall = time.perf_counter() - t0
-        done = sorted(self._done, key=lambda it: it.idx)
+        with self._lock:
+            done = sorted(self._done, key=lambda it: it.idx)
+            write_batches = list(self.write_batches)
+            n_failed, n_retried = self.n_failed, self.n_retried
+            mut_applied = self.mutations_applied
+            mut_failed = self.mutations_failed
         assert len(done) == n, f"lost items: {len(done)} != {n}"
         failed = [it for it in done if it.failed]
         if failed:
@@ -967,8 +993,8 @@ class ElasticExecutor:
         return ElasticResult(traces=traces, wall_s=wall,
                              throughput_qps=n / wall if wall > 0 else 0.0,
                              stage_stats=list(self.stats),
-                             write_batches=list(self.write_batches),
-                             n_failed=self.n_failed,
-                             n_retried=self.n_retried,
-                             mutations_applied=self.mutations_applied,
-                             mutations_failed=self.mutations_failed)
+                             write_batches=write_batches,
+                             n_failed=n_failed,
+                             n_retried=n_retried,
+                             mutations_applied=mut_applied,
+                             mutations_failed=mut_failed)

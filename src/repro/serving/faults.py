@@ -30,7 +30,7 @@ FAULT_KINDS = ("replica_kill", "replica_stall", "writer_stall")
 
 
 @dataclass
-class FaultEvent:
+class FaultEvent:  # deterministic
     """One scheduled fault: what breaks, where, when, and how badly."""
 
     t_s: float                      # run-relative injection time
@@ -63,7 +63,7 @@ class FaultEvent:
 
 
 @dataclass
-class FaultSpec:
+class FaultSpec:  # deterministic
     """The chaos block: scheduled events + the recovery policy knobs."""
 
     events: List[FaultEvent] = field(default_factory=list)

@@ -30,6 +30,13 @@ attention mask bounds reads at the row's current position, writes proceed
 strictly forward from 0 (prefill chunks) then position P (decode), and each
 position is overwritten before it first becomes readable — stale K/V from a
 previous occupant or a right-padded final chunk is never attended.
+
+Threading contract (lock-discipline audit): one ``GenEngine`` is owned by
+exactly one worker thread — the elastic executor clones a warm engine per
+generation replica (``replica_copy``) rather than sharing one — so the
+engine itself holds no locks and declares no guarded fields.  The only
+cross-thread state is the shared ``GenStats``, whose fields are
+``# guarded-by: _lock`` in ``repro.core.generator``.
 """
 from __future__ import annotations
 

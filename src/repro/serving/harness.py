@@ -75,11 +75,11 @@ class ServingHarness:
         self.accountant = LatencyAccountant(slo_ms=scfg.slo_ms)
         self.batcher = ContinuousBatcher(scfg.policy)
         self.batch_sizes: List[int] = []
-        self._in_flight = 0
-        self.peak_in_flight = 0
+        self._in_flight = 0       # guarded-by: _if_lock
+        self.peak_in_flight = 0   # guarded-by: _if_lock
         self._if_lock = threading.Lock()
-        self._next_id = 0
-        self._outstanding: Dict[int, Submission] = {}
+        self._next_id = 0         # guarded-by: _if_lock
+        self._outstanding: Dict[int, Submission] = {}  # guarded-by: _if_lock
 
     # -- monitor integration ----------------------------------------------
 
@@ -182,7 +182,7 @@ class ServingHarness:
             sub.record.start_s = t_start
             sub.record.batch_size = len(batch)
         self.batch_sizes.append(len(batch))
-        stage_before = dict(self.pipeline.timer.totals)
+        stage_before = self.pipeline.timer.breakdown()
         try:
             if batch[0].request.op == "query":
                 reqs = [s.request for s in batch]
@@ -208,7 +208,7 @@ class ServingHarness:
             for sub in batch:
                 self._finish(sub, ok=False, err=e)
             return
-        stage_after = self.pipeline.timer.totals
+        stage_after = self.pipeline.timer.breakdown()
         share = {k: (stage_after.get(k, 0.0) - stage_before.get(k, 0.0))
                  / len(batch)
                  for k in stage_after
@@ -267,7 +267,9 @@ class ServingHarness:
                 self.batcher.close()
                 executor.join()
         summary = self.accountant.summary(offered_qps=offered)
-        summary["peak_in_flight"] = float(self.peak_in_flight)
+        with self._if_lock:
+            peak_in_flight = self.peak_in_flight
+        summary["peak_in_flight"] = float(peak_in_flight)
         peak_depth = self.batcher.peak_depth
         if self.executor is not None:
             # the elastic backend bypasses the batcher; deepest stage queue
@@ -292,7 +294,7 @@ class ServingHarness:
         return ServingResult(summary=summary,
                              records=list(self.accountant.records),
                              batch_sizes=list(self.batch_sizes),
-                             peak_in_flight=self.peak_in_flight,
+                             peak_in_flight=peak_in_flight,
                              peak_queue_depth=peak_depth,
                              quality=quality)
 

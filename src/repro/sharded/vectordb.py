@@ -122,15 +122,15 @@ class ShardedVectorDB(DBInstance):
             JaxVectorDB(self._shard_cfg()) for _ in range(cfg.n_shards)]
         self.shard_capacity = self.shards[0].cfg.capacity
         self.doc_slots = _DocSlotsView(self)
-        self.counters: Dict[str, float] = {
+        self.counters: Dict[str, float] = {   # guarded-by: _mu
             "searches": 0, "search_time_s": 0.0, "mesh_searches": 0,
             "merge_time_s": 0.0,
         }
-        self._epoch = 0                # bumped on every mutation
+        self._epoch = 0                # guarded-by: _mu
         # fused-path caches: jitted shard_map fn per (mesh, k) + stacked
         # device arrays valid for one mutation epoch
-        self._mesh_fns: Dict[Tuple[int, int], Tuple[Callable, int]] = {}
-        self._mesh_arrays: Optional[Tuple[int, object, object]] = None
+        self._mesh_fns: Dict[Tuple[int, int], Tuple[Callable, int]] = {}  # guarded-by: _mu
+        self._mesh_arrays: Optional[Tuple[int, object, object]] = None   # guarded-by: _mu
         # optional obs.Tracer: fan-out/merge spans on the "db" thread lane
         self.tracer = None
 
@@ -277,7 +277,8 @@ class ShardedVectorDB(DBInstance):
         for s2, gi2 in per[1:]:   # cross-shard id ranges are disjoint, so
             s, gi = merge_topk(s, gi, s2, gi2, k)   # the vectorized path runs
         dtm = time.perf_counter() - t0
-        self.counters["merge_time_s"] += dtm
+        with self._mu:
+            self.counters["merge_time_s"] += dtm
         if tr is not None:
             te = tr.now()
             tr.add_span("db.merge", te - dtm, te, cat="db", tid="db",
@@ -305,18 +306,23 @@ class ShardedVectorDB(DBInstance):
         if size != cfg.n_shards:
             return None
         key = (id(mesh), k)
-        if key not in self._mesh_fns:
-            self._mesh_fns[key] = make_sharded_topk(mesh, k,
-                                                    corpus_axes=axes)
-        fn, _ = self._mesh_fns[key]
-        if self._mesh_arrays is None or self._mesh_arrays[0] != epoch:
-            vecs = jnp.asarray(
-                np.concatenate([s["vectors"] for s in snaps], axis=0))
-            live = jnp.asarray(np.concatenate([s["live"] for s in snaps]))
-            self._mesh_arrays = (epoch, vecs, live)
-        _, vecs, live = self._mesh_arrays
+        with self._mu:
+            if key not in self._mesh_fns:
+                self._mesh_fns[key] = make_sharded_topk(mesh, k,
+                                                        corpus_axes=axes)
+            fn, _ = self._mesh_fns[key]
+            if self._mesh_arrays is None or self._mesh_arrays[0] != epoch:
+                vecs = jnp.asarray(
+                    np.concatenate([s["vectors"] for s in snaps], axis=0))
+                live = jnp.asarray(
+                    np.concatenate([s["live"] for s in snaps]))
+                self._mesh_arrays = (epoch, vecs, live)
+            _, vecs, live = self._mesh_arrays
+        # the device computation itself runs lock-free: vecs/live are
+        # immutable device arrays pinned to this epoch's snapshot
         s, gi = fn(q, vecs, live)
-        self.counters["mesh_searches"] += 1
+        with self._mu:
+            self.counters["mesh_searches"] += 1
         return np.asarray(s), np.asarray(gi)
 
     # -- payloads / stats --------------------------------------------------
@@ -361,7 +367,7 @@ class ShardedVectorDB(DBInstance):
             "db_shards": lambda: float(self.cfg.n_shards),
             "db_shard_imbalance": lambda: self.stats()["shard_imbalance"],
             "db_mesh_searches": lambda: float(
-                self.counters["mesh_searches"]),
+                self.counters["mesh_searches"]),  # noqa: lock-discipline -- monitor-only sample; single dict read is GIL-atomic
         }
 
 

@@ -1,0 +1,2 @@
+# Seeded-violation fixtures for tests/test_analysis.py.  Each module
+# carries exactly the violations its test asserts on -- never "fix" them.

@@ -1,0 +1,22 @@
+# analysis: deterministic
+"""Fixture: wall-clock + global-RNG calls inside a deterministic zone."""
+import random
+import time
+
+import numpy as np
+
+
+def stamp() -> float:
+    return time.perf_counter()          # VIOLATION: wall clock
+
+
+def noise(n: int):
+    return np.random.rand(n)            # VIOLATION: process-global RNG
+
+
+def make_rng():
+    return random.Random()              # VIOLATION: unseeded constructor
+
+
+def make_seeded_rng():
+    return np.random.default_rng(0)     # allowed: explicit seed

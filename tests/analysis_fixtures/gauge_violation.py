@@ -1,0 +1,9 @@
+"""Fixture: an off-schema gauge name next to an on-schema one."""
+
+
+class Thing:
+    def gauges(self):
+        return {
+            "my_adhoc_key": lambda: 1.0,   # VIOLATION: no schema family
+            "db_live": lambda: 2.0,        # allowed: db_ family
+        }

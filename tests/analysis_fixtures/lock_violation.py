@@ -1,0 +1,18 @@
+"""Fixture: a guarded field touched outside its lock."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0   # guarded-by: _lock
+
+    def bad(self) -> None:
+        self.count += 1                 # VIOLATION: lock not held
+
+    def ok(self) -> None:
+        with self._lock:
+            self.count += 1
+
+    def marked(self) -> int:  # locked-by: _lock
+        return self.count

@@ -1,0 +1,18 @@
+"""Fixture: a spec class that drops a field and accepts unknown keys."""
+from dataclasses import dataclass
+from typing import Any, Dict
+
+
+@dataclass
+class BadSpec:
+    a: int = 1
+    b: int = 2
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"a": self.a, "b": self.b}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "BadSpec":
+        # VIOLATION 1: unknown keys pass through silently
+        # VIOLATION 2: "b" is dropped, so the round-trip loses it
+        return cls(a=int(d.get("a", 1)))

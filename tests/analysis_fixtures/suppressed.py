@@ -1,0 +1,7 @@
+# analysis: deterministic
+"""Fixture: a real violation silenced by an inline suppression."""
+import time
+
+
+def stamp() -> float:
+    return time.perf_counter()  # noqa: clock-purity -- fixture: suppression test

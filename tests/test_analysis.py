@@ -1,0 +1,258 @@
+"""The invariant linter itself: each pass fires on its seeded fixture with
+the right file:line, suppressions and the baseline round-trip work, the
+repo scan is clean, the registry raises clear construction errors, and the
+runtime lock-order detector catches an ABBA cycle (synthetic) while the
+real elastic+writer+chaos locks stay acyclic (stress)."""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis import core as acore
+from repro.analysis import (clock_purity, conformance, gauge_schema,
+                            lock_discipline)
+from repro.analysis.conformance import check_spec_roundtrip
+from repro.analysis.lockorder import (InstrumentedLock, LockOrderError,
+                                      LockOrderGraph, instrument)
+from repro.core import registry
+from repro.core.pipeline import PipelineConfig, RAGPipeline
+from repro.serving.elastic import ElasticExecutor
+from repro.workload.corpus import CorpusConfig, SyntheticCorpus
+from repro.workload.generator import Request
+from repro.workload.runner import gold_chunks_for
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "analysis_fixtures")
+
+
+def _fixture(name):
+    return acore.SourceFile(REPO, os.path.join(FIXTURES, name))
+
+
+def _line_of(sf, marker):
+    for i, ln in enumerate(sf.text.splitlines(), start=1):
+        if marker in ln:
+            return i
+    raise AssertionError(f"marker {marker!r} not in {sf.rel_path}")
+
+
+# -- pass firing on fixtures ------------------------------------------------
+
+def test_clock_purity_fires_on_fixture():
+    sf = _fixture("clock_violation.py")
+    found = clock_purity.run([sf], REPO)
+    got = {(f.path, f.line) for f in found}
+    rel = "tests/analysis_fixtures/clock_violation.py"
+    assert (rel, _line_of(sf, "time.perf_counter()")) in got
+    assert (rel, _line_of(sf, "np.random.rand(n)")) in got
+    assert (rel, _line_of(sf, "random.Random()")) in got
+    # seeded constructor is NOT a finding
+    assert (rel, _line_of(sf, "default_rng(0)")) not in got
+    assert len(found) == 3
+    assert all(f.pass_id == "clock-purity" for f in found)
+
+
+def test_lock_discipline_fires_on_fixture():
+    sf = _fixture("lock_violation.py")
+    found = lock_discipline.run([sf], REPO)
+    assert len(found) == 1
+    f = found[0]
+    assert f.path == "tests/analysis_fixtures/lock_violation.py"
+    assert f.line == _line_of(sf, "VIOLATION: lock not held")
+    assert "Counter.count" in f.message and "_lock" in f.message
+
+
+def test_gauge_schema_fires_on_fixture():
+    sf = _fixture("gauge_violation.py")
+    found = gauge_schema.run([sf], REPO)
+    assert len(found) == 1
+    f = found[0]
+    assert f.line == _line_of(sf, "my_adhoc_key")
+    assert "my_adhoc_key" in f.message
+
+
+def test_conformance_fires_on_bad_spec():
+    import importlib.util
+    import sys
+    spec = importlib.util.spec_from_file_location(
+        "analysis_fixture_spec_violation",
+        os.path.join(FIXTURES, "spec_violation.py"))
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod   # inspect needs the module registered
+    spec.loader.exec_module(mod)
+    found = check_spec_roundtrip(mod.BadSpec, {"b": 99}, REPO)
+    msgs = " | ".join(f.message for f in found)
+    assert "does not round-trip" in msgs
+    assert "unknown keys" in msgs
+    assert all(f.path == "tests/analysis_fixtures/spec_violation.py"
+               for f in found)
+
+
+def test_suppression_silences_finding():
+    sf = _fixture("suppressed.py")
+    raw = clock_purity.run([sf], REPO)
+    assert len(raw) == 1  # the violation is real...
+    assert sf.suppressed(raw[0].line, "clock-purity")  # ...and suppressed
+    assert not sf.suppressed(raw[0].line, "lock-discipline")
+
+
+# -- baseline ---------------------------------------------------------------
+
+def test_baseline_round_trip(tmp_path):
+    f1 = acore.Finding("clock-purity", "a.py", 3, "time.time() called")
+    f2 = acore.Finding("gauge-schema", "b.py", 9, "bad gauge 'x'")
+    path = str(tmp_path / "baseline.json")
+    acore.save_baseline(path, [f1, f2])
+    keys = acore.load_baseline(path)
+    assert keys == {f1.key(), f2.key()}
+    # line moves do not invalidate the baseline entry
+    moved = acore.Finding("clock-purity", "a.py", 17, "time.time() called")
+    assert acore.new_findings([moved, f2], keys) == []
+    fresh = acore.Finding("clock-purity", "a.py", 3, "time.sleep() called")
+    assert acore.new_findings([fresh], keys) == [fresh]
+    # baseline file is valid JSON with stable shape
+    data = json.loads(open(path).read())
+    assert {e["pass"] for e in data["findings"]} == \
+        {"clock-purity", "gauge-schema"}
+
+
+def test_repo_scan_is_clean():
+    """The committed tree carries zero unbaselined findings (the CI gate)."""
+    findings, _ = acore.run_passes(REPO)
+    baseline = acore.load_baseline(os.path.join(REPO, acore.BASELINE_NAME))
+    new = acore.new_findings(findings, baseline)
+    assert not new, "\n".join(f.render() for f in new)
+
+
+def test_conformance_clean_on_repo():
+    findings = conformance.run([], REPO)
+    assert not findings, "\n".join(f.render() for f in findings)
+
+
+# -- registry error paths ---------------------------------------------------
+
+def test_registry_create_names_missing_argument():
+    # the bi-encoder reranker requires an embedder (normally injected via
+    # _context); constructing without it must name component and key
+    with pytest.raises(registry.RegistryError) as ei:
+        registry.create("reranker", "bi")
+    msg = str(ei.value)
+    assert "reranker" in msg and "'bi'" in msg and "embedder" in msg
+    assert "_context" in msg
+
+
+def test_registry_create_names_unexpected_option():
+    with pytest.raises(registry.RegistryError) as ei:
+        registry.create("chunker", "fixed", sizzle=3)
+    msg = str(ei.value)
+    assert "chunker" in msg and "'fixed'" in msg and "sizzle" in msg
+
+
+def test_registry_create_still_injects_context():
+    emb = registry.create("embedder", "hash", dim=64)
+    rr = registry.create("reranker", "bi", _context={"embedder": emb})
+    assert rr is not None
+
+
+# -- runtime lock-order detector --------------------------------------------
+
+def test_lockorder_detects_abba_cycle():
+    """Two threads take (a then b) and (b then a) sequentially -- no
+    deadlock this run, but the order graph must show the cycle."""
+    g = LockOrderGraph()
+    a = InstrumentedLock(g, "a")
+    b = InstrumentedLock(g, "b")
+
+    def ab():
+        with a:
+            with b:
+                pass
+
+    def ba():
+        with b:
+            with a:
+                pass
+
+    for fn in (ab, ba):   # sequential: the cycle is in the *order*, not
+        t = threading.Thread(target=fn)   # in any actual contention
+        t.start()
+        t.join()
+    assert ("a", "b") in g.edges() and ("b", "a") in g.edges()
+    cycles = g.cycles()
+    assert any(set(c) == {"a", "b"} for c in cycles)
+    with pytest.raises(LockOrderError):
+        g.assert_acyclic()
+
+
+def test_lockorder_reentrant_acquire_is_not_a_cycle():
+    g = LockOrderGraph()
+    r = InstrumentedLock(g, "r", threading.RLock())
+    with r:
+        with r:
+            pass
+    assert g.edges() == []
+    g.assert_acyclic()
+
+
+def test_lockorder_nested_distinct_locks_acyclic():
+    g = LockOrderGraph()
+    outer = InstrumentedLock(g, "outer")
+    inner = InstrumentedLock(g, "inner")
+    with outer:
+        with inner:
+            pass
+    assert g.edges() == [("outer", "inner")]
+    g.assert_acyclic()
+
+
+def test_elastic_chaos_lock_order_acyclic():
+    """Instrument the real serving locks (executor, DB, timer, accounting
+    stats) and drive queries + mutations + chaos (replica kill, writer
+    stall) through the elastic executor: the observed acquisition order
+    must be deadlock-free."""
+    corpus = SyntheticCorpus(CorpusConfig(n_docs=24, seed=7))
+    pipe = RAGPipeline(PipelineConfig(index_type="flat", capacity=1 << 12,
+                                      nlist=8, retrieve_k=6, rerank_k=2))
+    pipe.index_documents(corpus.all_documents())
+    rng = np.random.default_rng(7)
+    qs, ans, golds = [], [], []
+    for d in range(24):
+        q, a = corpus.question_for(d, rng)
+        qs.append(q)
+        ans.append(a)
+        golds.append(gold_chunks_for(pipe.db, d, a))
+
+    ex = ElasticExecutor(pipe, replicas={"retrieval": 2, "generation": 2},
+                         default_batch=4, max_replicas=3, max_retries=2)
+    g = LockOrderGraph()
+    instrument(ex, "_lock", "elastic._lock", g)
+    instrument(pipe.db, "_mu", "vectordb._mu", g)
+    instrument(pipe.timer, "_lock", "timer._lock", g)
+
+    ex.start()
+    done = threading.Event()
+    n_done = []
+
+    def on_done(item):
+        n_done.append(item.idx)
+        if len(n_done) >= len(qs):
+            done.set()
+
+    for i, q in enumerate(qs):
+        ex.submit(q, ground_truth=ans[i], gold=golds[i], on_done=on_done)
+        if i == 4:
+            ex.kill_replica("retrieval")       # chaos: kill + respawn path
+            ex.spawn_replica("retrieval")
+        if i == 8:
+            ex.stall_writer(0.05)              # chaos: writer freeze+drain
+            ex.submit_mutation(Request(op="removal", step=i, doc_id=3),
+                               on_done=lambda err: None)
+    ex.drain()
+    assert done.wait(5.0)
+    acq = g.acquisitions()
+    assert acq.get("elastic._lock", 0) > 0
+    assert acq.get("vectordb._mu", 0) > 0
+    # an empty edge set is the healthy outcome: these locks never nest
+    g.assert_acyclic()
