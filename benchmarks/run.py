@@ -8,12 +8,12 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (accuracy_eval, chaos, elastic_scaling, gen_engine,
-                        index_schemes, indexing_breakdown, monitor_overhead,
-                        overhead, query_breakdown, resource_limits,
-                        resource_utilization, scenarios, sensitivity,
-                        serving, sharded_retrieval, stage_pipeline,
-                        update_workload)
+from benchmarks import (accuracy_eval, chaos, elastic_scaling, fused_retrieve,
+                        gen_engine, index_schemes, indexing_breakdown,
+                        monitor_overhead, overhead, query_breakdown,
+                        resource_limits, resource_utilization, scenarios,
+                        sensitivity, serving, sharded_retrieval,
+                        stage_pipeline, update_workload)
 from benchmarks.common import emit
 
 MODULES = {
@@ -34,6 +34,7 @@ MODULES = {
     "chaos": chaos,                           # fault injection + recovery
     "sharded_retrieval": sharded_retrieval,   # corpus scaling at flat p99
     "overhead": overhead,                     # tracing on/off A-B gate
+    "fused_retrieve": fused_retrieve,         # fused-kernel retrieve gate
 }
 
 

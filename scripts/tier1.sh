@@ -48,6 +48,13 @@ echo "== tier-1: sharded retrieval smoke (parity + flat-p99 scaling) =="
 # corpus scales 8x (the shard_scale golden itself rides scenarios --check)
 python -m benchmarks.sharded_retrieval --smoke --check > /dev/null
 
+echo "== tier-1: fused retrieve gate (parity + roofline + latency) =="
+# --check asserts: fused backend bit-exact vs the reference ladder on all
+# index_type x quant configs under interpret AND xla modes (incl. after
+# mutations/tombstones), fused HBM bytes strictly closer to the bandwidth
+# bound, and a micro-batch latency win on the sq8/pq xla paths
+python -m benchmarks.fused_retrieve --smoke --check > /dev/null
+
 echo "== tier-1: tracing overhead gate (on/off A-B, pinned budget) =="
 # --check asserts: span recording costs <=3% throughput and <=3% p99 on
 # the steady scenario served live through the elastic executor

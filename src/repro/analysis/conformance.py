@@ -11,7 +11,12 @@ Dynamic (import-the-repo) checks:
    resolves to registered components;
 4. every ``benchmarks/*.py`` module is registered in
    ``benchmarks/run.py``'s MODULES table (checked statically so the
-   benchmark imports never run at lint time).
+   benchmark imports never run at lint time), and the required gate rows
+   (``REQUIRED_BENCHMARKS``) are present;
+5. the retrieve-backend ladder: the required vectordb backends
+   (``REQUIRED_VECTORDB_BACKENDS``) are registered, the ``fused`` factory
+   actually produces a fused-rung DB, and the ``use_kernel`` ladder
+   rejects invalid rungs.
 """
 from __future__ import annotations
 
@@ -34,6 +39,13 @@ PROTOCOLS: Dict[str, Tuple[str, ...]] = {
     "reranker": ("rerank",),
     "llm": ("generate",),
 }
+
+#: vectordb backends every build must expose (the retrieve-backend ladder).
+REQUIRED_VECTORDB_BACKENDS: Tuple[str, ...] = ("jax", "sharded", "fused")
+
+#: benchmark gates that must stay in benchmarks/run.py MODULES even if the
+#: module file itself were deleted (the generic file scan would then miss it).
+REQUIRED_BENCHMARKS: Tuple[str, ...] = ("fused_retrieve",)
 
 
 def _locate(obj: Any, root: str) -> Tuple[str, int]:
@@ -203,6 +215,45 @@ def _benchmark_registration_findings(root: str) -> List[Finding]:
                 PASS, f"benchmarks/{mod}.py", 1,
                 f"benchmark module '{mod}' is not registered in "
                 f"benchmarks/run.py MODULES"))
+    for mod in REQUIRED_BENCHMARKS:
+        if mod not in registered:
+            out.append(Finding(
+                PASS, "benchmarks/run.py", 1,
+                f"required benchmark gate '{mod}' is missing from the "
+                f"MODULES table"))
+    return out
+
+
+def _retrieve_backend_findings(root: str) -> List[Finding]:
+    """The fused retrieve backend's registry/ladder invariants."""
+    from repro.core import registry
+    from repro.core import vectordb as vdb
+    out: List[Finding] = []
+    path, line = _locate(vdb.JaxVectorDB, root)
+    available = set(registry.available("vectordb"))
+    for name in REQUIRED_VECTORDB_BACKENDS:
+        if name not in available:
+            out.append(Finding(
+                PASS, path, line,
+                f"required vectordb backend '{name}' is not registered"))
+    if "fused" in available:
+        # tiny instantiation: the factory must pin the fused rung
+        db = registry.create("vectordb", "fused", index_type="flat",
+                             dim=8, capacity=64, nlist=4, flat_capacity=16)
+        if getattr(db, "_kernel", None) != "fused":
+            out.append(Finding(
+                PASS, path, line,
+                "vectordb:fused factory does not produce a fused-rung DB "
+                f"(_kernel={getattr(db, '_kernel', None)!r})"))
+    try:
+        vdb.kernel_ladder("definitely-not-a-rung")
+    except ValueError:
+        pass
+    else:
+        out.append(Finding(
+            PASS, path, line,
+            "kernel_ladder() accepts invalid use_kernel values (no "
+            "validation)"))
     return out
 
 
@@ -212,4 +263,5 @@ def run(files: List[SourceFile], root: str) -> List[Finding]:
     out.extend(_spec_findings(root))
     out.extend(_resolution_findings(root))
     out.extend(_benchmark_registration_findings(root))
+    out.extend(_retrieve_backend_findings(root))
     return out

@@ -34,6 +34,31 @@ from repro.kernels import ops as kops
 
 NEG = np.float32(-3.0e38)
 
+# the use_kernel ladder: how much of the retrieve hot path runs in Pallas
+#   off   — pure-jnp scoring (the reference ladder)
+#   op    — individual kernel ops (topk_search / quant_score), unfused
+#   fused — probe -> (dequant-)score -> select in one launch; IVF/PQ search
+#           runs over a bucket-contiguous packed mirror (see
+#           repro.kernels.fused_retrieve)
+KERNEL_LADDER = ("off", "op", "fused")
+
+
+def kernel_ladder(use_kernel) -> str:
+    """Normalize the ``use_kernel`` config value to a ladder rung.
+
+    Accepts the legacy booleans (``False`` -> ``off``, ``True`` -> ``op``)
+    and the string rungs; anything else raises naming the allowed values.
+    """
+    if use_kernel is None or use_kernel is False:
+        return "off"
+    if use_kernel is True:
+        return "op"
+    if use_kernel in KERNEL_LADDER:
+        return use_kernel
+    raise ValueError(
+        f"invalid use_kernel={use_kernel!r}; allowed values: "
+        f"False/True or {', '.join(KERNEL_LADDER)}")
+
 
 # ---------------------------------------------------------------------------
 # k-means (IVF training / PQ codebooks)
@@ -67,14 +92,24 @@ def kmeans(x: jnp.ndarray, k: int, iters: int = 10, seed: int = 0) -> jnp.ndarra
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("k", "use_kernel"))
-def _flat_search(q, vecs, live, k: int, use_kernel: bool = False):
-    """Exact search. q:[nq,d] vecs:[cap,d] live:[cap] -> (scores, idx) [nq,k]."""
-    if use_kernel:
-        return kops.topk_search(q, vecs, live, k)
+@partial(jax.jit, static_argnames=("k", "kernel", "mode"))
+def _flat_search(q, vecs, live, k: int, kernel: str = "off",
+                 mode: str = "interpret"):
+    """Exact search. q:[nq,d] vecs:[cap,d] live:[cap] -> (scores, idx) [nq,k].
+
+    ``mode`` is resolved by the caller *outside* the jit (kernel-dispatch
+    contract in ``repro.kernels.ops``: an env read at trace time would be
+    baked into the cache).  All rungs/modes return ``(NEG, -1)`` padding
+    for rows with fewer than ``k`` live entries.
+    """
+    if kernel == "fused":
+        return kops.fused_flat_topk(q, vecs, live, k, mode=mode)
+    if kernel == "op":
+        return kops.topk_search(q, vecs, live, k, mode=mode)
     scores = q @ vecs.T                                   # [nq, cap]
     scores = jnp.where(live[None, :], scores, NEG)
-    return jax.lax.top_k(scores, k)
+    top, idx = jax.lax.top_k(scores, k)
+    return top, jnp.where(top <= NEG / 2, -1, idx)
 
 
 @partial(jax.jit, static_argnames=("nprobe", "k"))
@@ -100,12 +135,22 @@ def _ivf_search(q, vecs, live, cent, buckets, bucket_live, nprobe: int, k: int):
     return top, idx
 
 
-@partial(jax.jit, static_argnames=("k",))
-def _sq8_flat_search(q, codes, scale, live, k: int):
-    """Scalar-quantized exact search via the quant_score kernel path."""
-    scores = kops.quant_score(q, codes, scale)
+@partial(jax.jit, static_argnames=("k", "kernel", "mode"))
+def _sq8_flat_search(q, codes, scale, live, k: int, kernel: str = "off",
+                     mode: str = "interpret"):
+    """Scalar-quantized exact search.
+
+    Unfused rungs score the whole corpus via ``quant_score`` (a full
+    ``[nq, N]`` matrix plus an int8->f32 corpus upcast) and reduce
+    afterwards; the ``fused`` rung selects in VMEM and never materializes
+    either.
+    """
+    if kernel == "fused":
+        return kops.fused_sq8_topk(q, codes, scale, live, k, mode=mode)
+    scores = kops.quant_score(q, codes, scale, mode=mode)
     scores = jnp.where(live[None, :], scores, NEG)
-    return jax.lax.top_k(scores, k)
+    top, idx = jax.lax.top_k(scores, k)
+    return top, jnp.where(top <= NEG / 2, -1, idx)
 
 
 @partial(jax.jit, static_argnames=("nprobe", "k"))
@@ -196,7 +241,8 @@ class DBConfig:
     use_hybrid: bool = True          # temp flat buffer for fresh inserts
     flat_capacity: int = 4096
     rebuild_threshold: float = 0.75  # rebuild when flat buffer this full
-    use_kernel: bool = False         # Pallas topk_search for flat scoring
+    # kernel ladder rung: False/"off" | True/"op" | "fused" (see KERNEL_LADDER)
+    use_kernel: object = False
     train_sample: int = 16384
 
 
@@ -214,6 +260,7 @@ class JaxVectorDB(DBInstance):
 
     def __init__(self, cfg: DBConfig):
         self.cfg = cfg
+        self._kernel = kernel_ladder(cfg.use_kernel)  # validated ladder rung
         self._mu = threading.RLock()   # serializes mutations vs snapshots
         d, cap = cfg.dim, cfg.capacity
         self.vectors = np.zeros((cap, d), dtype=np.float32)  # guarded-by: _mu
@@ -230,9 +277,15 @@ class JaxVectorDB(DBInstance):
         self.sq_scale: Optional[np.ndarray] = None       # guarded-by: _mu
         self.pq_codes: Optional[np.ndarray] = None       # guarded-by: _mu
         self.pq_codebook: Optional[np.ndarray] = None    # guarded-by: _mu
+        # bucket-contiguous mirror for the fused IVF/PQ kernels: row
+        # b*cap_b+j holds bucket b's j-th member (slot map + gathered
+        # vectors/codes); rebuilt wholesale with the buckets, rows are
+        # immutable in between (inserts always take fresh slots)
+        self.packed: Optional[Dict[str, np.ndarray]] = None  # guarded-by: _mu
         # profiling counters (read by the monitor)
         self.counters: Dict[str, float] = {   # guarded-by: _mu
             "inserts": 0, "removals": 0, "searches": 0, "rebuilds": 0,
+            "fused_searches": 0,
             "insert_time_s": 0.0, "build_time_s": 0.0, "search_time_s": 0.0,
             "flat_fill": 0.0,
         }
@@ -343,10 +396,28 @@ class JaxVectorDB(DBInstance):
             self.bucket_live = buckets >= 0
             if overflow:
                 raise MemoryError(f"{overflow} vectors overflowed IVF buckets")
+            if self._kernel == "fused":
+                self._build_packed_locked()
         self.indexed[:] = False
         self.indexed[live_idx] = True
         self.counters["rebuilds"] += 1
         self.counters["build_time_s"] += time.perf_counter() - t0
+
+    def _build_packed_locked(self) -> None:  # locked-by: _mu
+        """Rebuild the bucket-contiguous mirror for the fused kernels.
+
+        ``slot`` maps packed row -> original slot id (-1 pad); the gathered
+        vectors/codes rows are copies, so later tombstones only affect the
+        search-time ``ok`` mask, never the mirrored data.
+        """
+        slot = self.buckets.reshape(-1).astype(np.int32)
+        safe = np.maximum(slot, 0)
+        packed: Dict[str, np.ndarray] = {"slot": slot}
+        if self.cfg.quant == "pq" and self.pq_codes is not None:
+            packed["codes"] = self.pq_codes[safe]
+        else:
+            packed["vecs"] = self.vectors[safe]
+        self.packed = packed
 
     def _train_sq(self):  # locked-by: _mu
         live_idx = np.nonzero(self.live)[0]
@@ -389,6 +460,8 @@ class JaxVectorDB(DBInstance):
         scores, idx = self._search_arrays(q, k)
         with self._mu:   # concurrent retrieval replicas share the counters
             self.counters["searches"] += len(vectors)
+            if self._kernel == "fused":
+                self.counters["fused_searches"] += len(vectors)
             self.counters["search_time_s"] += time.perf_counter() - t0
         return [SearchResult(chunk_ids=np.asarray(idx[i]),
                              scores=np.asarray(scores[i]))
@@ -413,6 +486,7 @@ class JaxVectorDB(DBInstance):
                 "bucket_live": self.bucket_live,
                 "sq_codes": self.sq_codes, "sq_scale": self.sq_scale,
                 "pq_codes": self.pq_codes, "pq_codebook": self.pq_codebook,
+                "packed": self.packed,
                 "nprobe": self.cfg.nprobe,
             }
 
@@ -427,14 +501,18 @@ class JaxVectorDB(DBInstance):
         cfg = self.cfg
         if snap is None:
             snap = self._snapshot()
+        # kernel mode resolved here, OUTSIDE the jitted primitives, and
+        # threaded through as a static argument (dispatch contract in
+        # repro.kernels.ops: an env read at trace time goes stale)
+        mode = kops.kernel_mode()
         live, indexed = snap["live"], snap["indexed"]
         main_live = live & indexed if cfg.use_hybrid else live
         if not snap["built"]:
             # index never built: brute-force everything (cold start)
             s, i = _flat_search(q, jnp.asarray(snap["vectors"]),
-                                jnp.asarray(live), k, cfg.use_kernel)
+                                jnp.asarray(live), k, self._kernel, mode)
             return np.asarray(s), np.asarray(i)
-        s_main, i_main = self._search_main(q, jnp.asarray(main_live), k, snap)
+        s_main, i_main = self._search_main(q, main_live, k, snap, mode)
         if not cfg.use_hybrid:
             return np.asarray(s_main), np.asarray(i_main)
         fresh = live & ~indexed
@@ -442,22 +520,27 @@ class JaxVectorDB(DBInstance):
             return np.asarray(s_main), np.asarray(i_main)
         # linear scan of the temp flat buffer (the paper's freshness path)
         s_fl, i_fl = _flat_search(q, jnp.asarray(snap["vectors"]),
-                                  jnp.asarray(fresh), k, cfg.use_kernel)
+                                  jnp.asarray(fresh), k, self._kernel, mode)
         return merge_topk(np.asarray(s_main), np.asarray(i_main),
                           np.asarray(s_fl), np.asarray(i_fl), k)
 
-    def _search_main(self, q, live, k: int, snap: Dict[str, object]):
+    def _search_main(self, q, main_live: np.ndarray, k: int,
+                     snap: Dict[str, object], mode: str):
         cfg = self.cfg
         # ladder values are sized for the global nlist; a row-partitioned
         # shard has proportionally fewer lists, so clamp
         nprobe = min(int(snap["nprobe"]), cfg.nlist)
+        live = jnp.asarray(main_live)
         if cfg.index_type == "flat":
             if cfg.quant == "sq8" and snap["sq_codes"] is not None:
                 return _sq8_flat_search(q, jnp.asarray(snap["sq_codes"]),
                                         jnp.asarray(snap["sq_scale"]),
-                                        live, k)
+                                        live, k, self._kernel, mode)
             return _flat_search(q, jnp.asarray(snap["vectors"]), live, k,
-                                cfg.use_kernel)
+                                self._kernel, mode)
+        if self._kernel == "fused" and snap["packed"] is not None:
+            return self._search_main_fused(q, main_live, nprobe, k, snap,
+                                           mode)
         if cfg.quant == "pq" and snap["pq_codes"] is not None:
             return _pq_ivf_search(
                 q, jnp.asarray(snap["pq_codes"]),
@@ -469,6 +552,29 @@ class JaxVectorDB(DBInstance):
                            jnp.asarray(snap["centroids"]),
                            jnp.asarray(snap["buckets"]),
                            jnp.asarray(snap["bucket_live"]), nprobe, k)
+
+    def _search_main_fused(self, q, main_live: np.ndarray, nprobe: int,
+                           k: int, snap: Dict[str, object], mode: str):
+        """Fused IVF/PQ probe over the packed mirror (one kernel launch).
+
+        The mirror rows are immutable between rebuilds, so post-snapshot
+        mutations are reflected exactly as in the unfused path: through the
+        liveness mask alone.  ``ok`` is recomputed per search from the
+        snapshot's copied masks — a tombstone lands as ``ok=0`` on the dead
+        row, identical to ``_ivf_search`` masking it to NEG.
+        """
+        packed = snap["packed"]
+        slot = packed["slot"]
+        ok = ((slot >= 0) & main_live[np.maximum(slot, 0)]).astype(np.int8)
+        if self.cfg.quant == "pq" and packed.get("codes") is not None:
+            return kops.fused_pq_topk(
+                q, jnp.asarray(snap["pq_codebook"]),
+                jnp.asarray(snap["centroids"]),
+                jnp.asarray(packed["codes"]), jnp.asarray(slot),
+                jnp.asarray(ok), nprobe, k, mode=mode)
+        return kops.fused_ivf_topk(
+            q, jnp.asarray(snap["centroids"]), jnp.asarray(packed["vecs"]),
+            jnp.asarray(slot), jnp.asarray(ok), nprobe, k, mode=mode)
 
     # -- misc --------------------------------------------------------------
 
@@ -508,5 +614,23 @@ class JaxVectorDB(DBInstance):
 @register("vectordb", "jax")
 def make_db(index_type: str = "ivf", quant: str = "none", dim: int = 384,
             **kw) -> JaxVectorDB:
+    return JaxVectorDB(DBConfig(index_type=index_type, quant=quant, dim=dim,
+                                **kw))
+
+
+@register("vectordb", "fused")
+def make_fused_db(index_type: str = "ivf", quant: str = "none",
+                  dim: int = 384, **kw) -> JaxVectorDB:
+    """``vectordb:jax`` pinned to the fused retrieve backend.
+
+    Spec-selectable shorthand for ``{"component": "jax", "options":
+    {"use_kernel": "fused"}}`` — one coalesced retrieve micro-batch is one
+    kernel launch (``repro.kernels.fused_retrieve``).
+    """
+    kw.setdefault("use_kernel", "fused")
+    if kernel_ladder(kw["use_kernel"]) != "fused":
+        raise ValueError(
+            f"vectordb:fused requires use_kernel='fused', got "
+            f"{kw['use_kernel']!r}")
     return JaxVectorDB(DBConfig(index_type=index_type, quant=quant, dim=dim,
                                 **kw))

@@ -1,0 +1,425 @@
+"""Fused retrieve backend: probe → (dequant-)score → top-k in one kernel.
+
+Motivation (ROADMAP item 2): the unfused ladder in ``repro.core.vectordb``
+computes full candidate score matrices and reduces them afterwards —
+``_sq8_flat_search`` runs ``quant_score`` over the whole corpus and hands a
+``[nq, N]`` matrix to ``lax.top_k``, and ``_ivf_search``/``_pq_ivf_search``
+gather ``[nq, nprobe, cap_b, d]`` candidate tensors before a flattened
+top-k.  On a bandwidth-bound search those intermediate HBM round-trips are
+the dominant cost: the corpus bytes must stream through HBM exactly once,
+everything else is overhead (see ``repro.roofline.retrieve`` for the bytes
+model the benchmark gate checks against).
+
+The fused kernels keep every intermediate in VMEM:
+
+* **flat / sq8** — corpus (or int8 code) tiles stream HBM→VMEM, are scored
+  on the MXU against the resident query block (codes upcast int8→f32 in
+  VMEM), and reduced *in VMEM* to a per-tile top-k by ``k`` rounds of
+  (max, argmax, mask).  Only ``[nq, n_tiles, k]`` candidates (≪ ``[nq, N]``)
+  reach HBM; a cheap ``lax.top_k`` merge outside the kernel produces the
+  global winners.
+* **ivf / pq** — the vector DB maintains a *bucket-contiguous packed
+  mirror* of the corpus (built at ``build_index`` time: bucket ``b`` owns
+  rows ``[b·cap_b, (b+1)·cap_b)``).  Centroid scoring + top-``nprobe``
+  probe selection is a tiny ``[nq, nlist]`` XLA prologue whose winners feed
+  the kernel as a *scalar-prefetch* operand: grid step ``(i, p)`` DMAs
+  exactly the probed bucket's block into VMEM via the prefetched index map,
+  scores it against query ``i`` (PQ: ADC gather from the per-query LUT,
+  resident in VMEM), and selects the bucket-local top-k.  The
+  ``[nq, nprobe, cap_b]`` candidate tensors of the unfused path never
+  exist; ``[nq, nprobe, k]`` candidates merge outside.
+
+Every kernel is batched over the query axis, so one coalesced retrieve
+micro-batch from the elastic executor is a single kernel launch.
+
+Modes: the ``pallas`` variants compile on TPU and validate under
+``interpret=True`` on CPU; the ``*_xla`` fallbacks implement the *same
+tiled algorithm* (per-tile score → local top-k → merge) with ``lax.scan``
+carrying only tile-sized intermediates, so outputs are identical across
+modes and the CPU benchmark path still avoids materializing the full
+matrices.  Dispatch lives in ``repro.kernels.ops``.
+
+Output contract (shared with ``topk_search_pallas``): rows with fewer than
+``k`` live matches pad with ``(NEG, -1)`` — masked/dead candidates score
+exactly ``NEG`` and any id whose score is ``<= NEG/2`` is replaced by
+``-1``, so dead-slot ids never leak into the candidate set.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -3.0e38
+
+
+def merge_candidates(cand_s, cand_i, k: int):
+    """Global top-k over per-tile/per-bucket candidates.
+
+    ``cand_s``/``cand_i``: ``[nq, C]`` candidate scores/ids in tile-major,
+    rank-minor order (ties therefore resolve exactly as a flat
+    ``lax.top_k`` over the unfused score matrix would).  Pads with
+    ``(NEG, -1)`` when ``C < k``.
+    """
+    nq, c = cand_s.shape
+    if c < k:
+        cand_s = jnp.pad(cand_s, ((0, 0), (0, k - c)), constant_values=NEG)
+        cand_i = jnp.pad(cand_i, ((0, 0), (0, k - c)), constant_values=-1)
+    top, pos = jax.lax.top_k(cand_s, k)
+    idx = jnp.take_along_axis(cand_i, pos, axis=1)
+    return top, jnp.where(top <= NEG / 2, -1, idx)
+
+
+# ---------------------------------------------------------------------------
+# flat / sq8: tile-streamed exact scan
+# ---------------------------------------------------------------------------
+
+
+def _sq8_tile_kernel(qs_ref, codes_ref, live_ref, out_s_ref, out_i_ref, *,
+                     k: int, bn: int):
+    """One grid step: dequant-score one (bq × bn) int8 tile, emit its
+    local top-k.  Codes upcast int8→f32 in VMEM — HBM only ever sees the
+    1-byte codes."""
+    j = pl.program_id(1)
+    qs = qs_ref[...]                                   # [bq, d] f32 prescaled
+    codes = codes_ref[...].astype(jnp.float32)         # [bn, d] int8 -> f32
+    live = live_ref[...]                               # [bn] int8
+    scores = jax.lax.dot_general(
+        qs, codes, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # [bq, bn] on the MXU
+    scores = jnp.where(live[None, :] != 0, scores, NEG)
+    base = j * bn
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+
+    def body(t, carry):
+        scores, col = carry
+        m = jnp.max(scores, axis=1)
+        am = jnp.argmax(scores, axis=1)
+        out_s_ref[:, 0, t] = m
+        out_i_ref[:, 0, t] = (base + am).astype(jnp.int32)
+        return jnp.where(col == am[:, None], NEG, scores), col
+
+    jax.lax.fori_loop(0, k, body, (scores, col))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "bn", "interpret"))
+def sq8_topk_pallas(q, codes, scale, live, k: int, *, bq: int = 128,
+                    bn: int = 1024, interpret: bool = True):
+    """q:[nq,d] f32, codes:[N,d] int8, scale:[d], live:[N]
+    -> (scores [nq,k], idx [nq,k]) with (NEG, -1) padding."""
+    nq, d = q.shape
+    N = codes.shape[0]
+    qs = q * scale[None, :]
+    nq_p = -(-nq // bq) * bq
+    n_p = -(-N // bn) * bn
+    qp = jnp.pad(qs, ((0, nq_p - nq), (0, 0)))
+    cp = jnp.pad(codes, ((0, n_p - N), (0, 0)))
+    lp = jnp.pad(live.astype(jnp.int8), (0, n_p - N))
+    nt = n_p // bn
+    out_s, out_i = pl.pallas_call(
+        functools.partial(_sq8_tile_kernel, k=k, bn=bn),
+        grid=(nq_p // bq, nt),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, 1, k), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bq, 1, k), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq_p, nt, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq_p, nt, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, cp, lp)
+    return merge_candidates(out_s[:nq].reshape(nq, nt * k),
+                            out_i[:nq].reshape(nq, nt * k), k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn"))
+def _tiled_topk_xla(qs, mat, live, k: int, bn: int):
+    """XLA realization of the tile-streamed scan: ``lax.scan`` over corpus
+    tiles, per-tile score + local top-k, tile-sized intermediates only."""
+    nq = qs.shape[0]
+    d = mat.shape[1]
+    N = mat.shape[0]
+    n_p = -(-N // bn) * bn
+    mp = jnp.pad(mat, ((0, n_p - N), (0, 0)))
+    lp = jnp.pad(live.astype(bool), (0, n_p - N))
+    nt = n_p // bn
+    kt = min(k, bn)
+
+    def tile(carry, inp):
+        c, l, base = inp
+        s = jax.lax.dot_general(
+            qs, c.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # [nq, bn]
+        s = jnp.where(l[None, :], s, NEG)
+        ts, tp = jax.lax.top_k(s, kt)
+        return carry, (ts, (base + tp).astype(jnp.int32))
+
+    _, (cs, ci) = jax.lax.scan(
+        tile, 0,
+        (mp.reshape(nt, bn, d), lp.reshape(nt, bn),
+         jnp.arange(nt, dtype=jnp.int32) * bn))
+    cand_s = jnp.moveaxis(cs, 0, 1).reshape(nq, nt * kt)
+    cand_i = jnp.moveaxis(ci, 0, 1).reshape(nq, nt * kt)
+    return merge_candidates(cand_s, cand_i, k)
+
+
+def flat_topk_xla(q, vecs, live, k: int, *, bn: int = 1024):
+    """Fused-equivalent exact scan (f32 corpus), XLA fallback."""
+    return _tiled_topk_xla(q, vecs, live, k, bn)
+
+
+def sq8_topk_xla(q, codes, scale, live, k: int, *, bn: int = 1024):
+    """Fused-equivalent SQ-int8 scan, XLA fallback: int8 tiles upcast
+    per-tile (cache-resident) instead of materializing the f32 corpus."""
+    return _tiled_topk_xla(q * scale[None, :], codes, live, k, bn)
+
+
+# ---------------------------------------------------------------------------
+# ivf / pq: scalar-prefetched bucket probe over the packed mirror
+# ---------------------------------------------------------------------------
+
+
+def _bucket_topk(scores, slot, out_s_ref, out_i_ref, k: int):
+    """k rounds of (max, argmax, mask) over one probed bucket's VMEM tile.
+
+    ``scores``: [1, cap_b]; ``slot``: [cap_b] original slot ids (the packed
+    mirror's row -> slot map), emitted for the winners."""
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+
+    def body(t, carry):
+        sc, = carry
+        m = jnp.max(sc, axis=1)
+        am = jnp.argmax(sc, axis=1)
+        out_s_ref[0, 0, t] = m[0]
+        out_i_ref[0, 0, t] = slot[am[0]]
+        return (jnp.where(col == am[:, None], NEG, sc),)
+
+    jax.lax.fori_loop(0, k, body, (scores,))
+
+
+def _ivf_bucket_kernel(probe_ref, q_ref, vecs_ref, ok_ref, slot_ref,
+                       out_s_ref, out_i_ref, *, k: int):
+    """Grid step (i, p): score query i against its p-th probed bucket."""
+    del probe_ref                     # consumed by the index maps
+    q = q_ref[...]                    # [1, d]
+    vecs = vecs_ref[...]              # [cap_b, d]
+    ok = ok_ref[...]                  # [cap_b] int8
+    slot = slot_ref[...]              # [cap_b] int32
+    scores = jax.lax.dot_general(
+        q, vecs, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # [1, cap_b]
+    scores = jnp.where(ok[None, :] != 0, scores, NEG)
+    _bucket_topk(scores, slot, out_s_ref, out_i_ref, k)
+
+
+def _probe(q, cent, nprobe: int):
+    """Tiny XLA prologue: centroid scores -> top-nprobe bucket ids.
+
+    Identical arithmetic to the unfused ``_ivf_search`` probe, so the
+    fused path scores exactly the same buckets."""
+    _, probe = jax.lax.top_k(q @ cent.T, nprobe)
+    return probe.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "interpret"))
+def ivf_topk_pallas(q, cent, packed_vecs, packed_slot, packed_ok,
+                    nprobe: int, k: int, *, interpret: bool = True):
+    """IVF probe→score→select over the packed mirror, one launch.
+
+    q:[nq,d]; cent:[nlist,d]; packed_vecs:[nlist*cap_b,d];
+    packed_slot/packed_ok:[nlist*cap_b] (slot id / liveness of each packed
+    row, -1 / 0 for pads and tombstones).
+
+    Per-query blocks are (1, d): bucket membership differs per query, so
+    the MXU tile is inherently narrow — the win is bandwidth (validated in
+    interpret mode; see module docstring).
+    """
+    nq, d = q.shape
+    nlist = cent.shape[0]
+    cap_b = packed_vecs.shape[0] // nlist
+    probe = _probe(q, cent, nprobe)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nq, nprobe),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, p, probe: (i, 0)),
+            pl.BlockSpec((cap_b, d), lambda i, p, probe: (probe[i, p], 0)),
+            pl.BlockSpec((cap_b,), lambda i, p, probe: (probe[i, p],)),
+            pl.BlockSpec((cap_b,), lambda i, p, probe: (probe[i, p],)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, k), lambda i, p, probe: (i, p, 0)),
+            pl.BlockSpec((1, 1, k), lambda i, p, probe: (i, p, 0)),
+        ],
+    )
+    out_s, out_i = pl.pallas_call(
+        functools.partial(_ivf_bucket_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, nprobe, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, nprobe, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(probe, q, packed_vecs, packed_ok, packed_slot)
+    return merge_candidates(out_s.reshape(nq, nprobe * k),
+                            out_i.reshape(nq, nprobe * k), k)
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k"))
+def ivf_topk_xla(q, cent, packed_vecs, packed_slot, packed_ok,
+                 nprobe: int, k: int):
+    """XLA fallback: ``lax.scan`` over probes, per-probe bucket gather +
+    local top-k — the [nq, nprobe, cap_b, d] tensor never exists."""
+    nq, d = q.shape
+    nlist = cent.shape[0]
+    cap_b = packed_vecs.shape[0] // nlist
+    probe = _probe(q, cent, nprobe)
+    pv = packed_vecs.reshape(nlist, cap_b, d)
+    ps = packed_slot.reshape(nlist, cap_b)
+    po = packed_ok.reshape(nlist, cap_b)
+    kt = min(k, cap_b)
+
+    def per_probe(carry, p):
+        b = probe[:, p]                                # [nq]
+        # keep a size-1 probe axis: the two-batch-dim dot_general then
+        # lowers with the same d-reduction order as the unfused
+        # ``qd,qpbd->qpb`` einsum, preserving bit-exact score parity
+        s = jnp.einsum("qd,qpbd->qpb", q, pv[b][:, None])[:, 0]
+        s = jnp.where(po[b] != 0, s, NEG)
+        ts, tp = jax.lax.top_k(s, kt)
+        return carry, (ts, jnp.take_along_axis(ps[b], tp, axis=1))
+
+    _, (cs, ci) = jax.lax.scan(per_probe, 0,
+                               jnp.arange(nprobe, dtype=jnp.int32))
+    cand_s = jnp.moveaxis(cs, 0, 1).reshape(nq, nprobe * kt)
+    cand_i = jnp.moveaxis(ci, 0, 1).reshape(nq, nprobe * kt)
+    return merge_candidates(cand_s, cand_i, k)
+
+
+def _pq_lut(q, codebook):
+    """Per-query ADC lookup tables [nq, m, 256] (identical einsum to the
+    unfused ``_pq_ivf_search``)."""
+    m, _, dsub = codebook.shape
+    nq = q.shape[0]
+    return jnp.einsum("qms,mcs->qmc", q.reshape(nq, m, dsub), codebook)
+
+
+def adc_sum(gath):
+    """Sum gathered LUT values over the trailing subspace axis with a
+    *fixed* (sequential) association order.
+
+    ``jnp.sum`` leaves the reduction order to the backend — the compiled
+    XLA program and the Pallas interpreter pick different trees, which
+    costs 1-ulp score divergence across kernel modes and breaks the
+    bit-exact parity gate.  Unrolled adds (``m`` is small and static)
+    cannot be reassociated, so every mode — and the unfused reference in
+    ``repro.core.vectordb`` — produces identical bits.
+    """
+    out = gath[..., 0]
+    for t in range(1, gath.shape[-1]):
+        out = out + gath[..., t]
+    return out
+
+
+def _pq_bucket_kernel(probe_ref, lut_ref, codes_ref, ok_ref, slot_ref,
+                      out_s_ref, out_i_ref, *, k: int):
+    """Grid step (i, p): ADC-score query i's LUT against one bucket's codes.
+
+    The [m, 256] LUT is VMEM-resident; the gather is a VMEM table lookup
+    (validated in interpret mode)."""
+    del probe_ref
+    lut = lut_ref[0]                  # [m, 256]
+    codes = codes_ref[...]            # [cap_b, m] int32
+    ok = ok_ref[...]
+    slot = slot_ref[...]
+    gath = jnp.take_along_axis(
+        jnp.broadcast_to(lut[None], (codes.shape[0],) + lut.shape),
+        codes[..., None], axis=2)[..., 0]              # [cap_b, m]
+    scores = adc_sum(gath)[None, :]                    # [1, cap_b]
+    scores = jnp.where(ok[None, :] != 0, scores, NEG)
+    _bucket_topk(scores, slot, out_s_ref, out_i_ref, k)
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "interpret"))
+def pq_topk_pallas(q, codebook, cent, packed_codes, packed_slot, packed_ok,
+                   nprobe: int, k: int, *, interpret: bool = True):
+    """PQ ADC probe→score→select over packed bucket codes, one launch."""
+    nq = q.shape[0]
+    m = codebook.shape[0]
+    nlist = cent.shape[0]
+    cap_b = packed_codes.shape[0] // nlist
+    lut = _pq_lut(q, codebook)
+    probe = _probe(q, cent, nprobe)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nq, nprobe),
+        in_specs=[
+            pl.BlockSpec((1, m, 256), lambda i, p, probe: (i, 0, 0)),
+            pl.BlockSpec((cap_b, m), lambda i, p, probe: (probe[i, p], 0)),
+            pl.BlockSpec((cap_b,), lambda i, p, probe: (probe[i, p],)),
+            pl.BlockSpec((cap_b,), lambda i, p, probe: (probe[i, p],)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, k), lambda i, p, probe: (i, p, 0)),
+            pl.BlockSpec((1, 1, k), lambda i, p, probe: (i, p, 0)),
+        ],
+    )
+    out_s, out_i = pl.pallas_call(
+        functools.partial(_pq_bucket_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, nprobe, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, nprobe, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(probe, lut, packed_codes, packed_ok, packed_slot)
+    return merge_candidates(out_s.reshape(nq, nprobe * k),
+                            out_i.reshape(nq, nprobe * k), k)
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k"))
+def pq_topk_xla(q, codebook, cent, packed_codes, packed_slot, packed_ok,
+                nprobe: int, k: int):
+    """XLA fallback: scan over probes, per-probe code gather + ADC + local
+    top-k — tile-sized intermediates only.
+
+    The ADC lookup indexes a *flattened* per-query ``[m*256]`` table
+    (``code + 256*subspace``): one single-axis take_along_axis, which XLA
+    CPU lowers ~4x faster than the rank-3 broadcast gather while fetching
+    bit-identical values.
+    """
+    nq = q.shape[0]
+    m = codebook.shape[0]
+    nlist = cent.shape[0]
+    cap_b = packed_codes.shape[0] // nlist
+    flat_lut = _pq_lut(q, codebook).reshape(nq, m * 256)
+    probe = _probe(q, cent, nprobe)
+    pc = packed_codes.reshape(nlist, cap_b, m)
+    ps = packed_slot.reshape(nlist, cap_b)
+    po = packed_ok.reshape(nlist, cap_b)
+    offs = (jnp.arange(m, dtype=packed_codes.dtype) * 256)[None, None, :]
+    kt = min(k, cap_b)
+
+    def per_probe(carry, p):
+        b = probe[:, p]
+        fidx = (pc[b] + offs).reshape(nq, cap_b * m)
+        gath = jnp.take_along_axis(flat_lut, fidx, axis=1)
+        s = adc_sum(gath.reshape(nq, cap_b, m))        # [nq, cap_b]
+        s = jnp.where(po[b] != 0, s, NEG)
+        ts, tp = jax.lax.top_k(s, kt)
+        return carry, (ts, jnp.take_along_axis(ps[b], tp, axis=1))
+
+    _, (cs, ci) = jax.lax.scan(per_probe, 0,
+                               jnp.arange(nprobe, dtype=jnp.int32))
+    cand_s = jnp.moveaxis(cs, 0, 1).reshape(nq, nprobe * kt)
+    cand_i = jnp.moveaxis(ci, 0, 1).reshape(nq, nprobe * kt)
+    return merge_candidates(cand_s, cand_i, k)

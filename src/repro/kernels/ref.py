@@ -12,11 +12,17 @@ NEG = jnp.float32(-3.0e38)
 def topk_search(q, vecs, live, k: int):
     """Exact similarity top-k.  q:[nq,d] vecs:[N,d] live:[N] bool.
 
-    Returns (scores [nq,k], idx [nq,k] int32).
+    Returns (scores [nq,k], idx [nq,k] int32).  Rows with fewer than ``k``
+    live entries pad with ``(NEG, -1)`` — the same contract as
+    ``topk_search_pallas`` (previously this oracle leaked the raw
+    ``lax.top_k`` position of a masked row, so results were
+    mode-dependent: id ``-1`` under pallas/interpret but a garbage dead
+    slot under ``REPRO_KERNEL_MODE=xla``).
     """
     scores = q @ vecs.T
     scores = jnp.where(live[None, :], scores, NEG)
-    return jax.lax.top_k(scores, k)
+    top, idx = jax.lax.top_k(scores, k)
+    return top, jnp.where(top <= NEG / 2, -1, idx)
 
 
 def quant_score(q, codes, scale):

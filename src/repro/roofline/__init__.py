@@ -1,2 +1,4 @@
 from repro.roofline.analysis import (  # noqa: F401
     HW, collective_bytes, roofline_report)
+from repro.roofline.retrieve import (  # noqa: F401
+    RetrieveShape, hbm_bytes, roofline)

@@ -1,0 +1,142 @@
+"""Analytic HBM-traffic roofline for the retrieve ladder (fused vs unfused).
+
+Why analytic rather than HLO cost analysis: the fused backend's win is that
+intermediates (score matrices, gathered candidate tensors) stay in VMEM,
+and on the host-CPU dry-run the XLA *fallback* still writes per-tile
+candidates — so ``cost_analysis()`` of what this machine can lower does not
+represent the TPU kernel's traffic.  The same precedent as
+``memory_flash_s`` in ``roofline.analysis``: model the bytes the Pallas
+kernel (validated bit-exact in interpret mode) actually moves.
+
+Terms per retrieve micro-batch (``nq`` queries, top-``k``), all in bytes:
+
+* **bound** — the bandwidth lower bound: the corpus payload the search
+  *must* stream from HBM once (vectors / int8 codes / packed PQ codes of
+  every scored row) plus query/output I/O.  No exact search can move less.
+* **unfused** — bound + the reference ladder's HBM-materialized
+  intermediates: the full ``[nq, N]`` (or ``[nq, nprobe, cap_b]``) score
+  matrix written then re-read by ``lax.top_k``, the gathered
+  ``[nq, nprobe, cap_b, d]`` candidate tensor of ``_ivf_search``, the
+  int8→f32 corpus upcast of the sq8 reference, and the per-code LUT
+  gather values of ``_pq_ivf_search``.
+* **fused** — bound + only the tiny ``[nq, n_tiles·k]`` candidate
+  lists (scores+ids, written once, merged once) and the IVF probe
+  prologue (centroid scores).
+
+``bound_fraction = bound / total`` measures how close a path sits to the
+bandwidth roofline; the ``benchmarks/fused_retrieve.py --check`` gate
+asserts the fused fraction strictly dominates the unfused fraction on
+every ladder config.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.roofline.analysis import HW
+
+F32 = 4
+I32 = 4
+I8 = 1
+
+
+@dataclass(frozen=True)
+class RetrieveShape:
+    """One retrieve micro-batch against one index configuration."""
+
+    nq: int                 # coalesced queries per launch
+    n: int                  # live corpus rows
+    d: int                  # embedding dim
+    k: int                  # top-k
+    index_type: str = "flat"   # flat | ivf
+    quant: str = "none"        # none | sq8 | pq
+    nlist: int = 64
+    nprobe: int = 8
+    bucket_cap: int = 0        # 0 -> auto (mirrors DBConfig: 4*n/nlist)
+    pq_m: int = 8
+    bn: int = 1024             # flat-scan tile rows (kernel default)
+
+    @property
+    def cap_b(self) -> int:
+        return self.bucket_cap or max(16, int(4 * self.n / self.nlist))
+
+    @property
+    def rows_scored(self) -> int:
+        """Rows each query's scan touches (R)."""
+        if self.index_type == "ivf":
+            return self.nprobe * self.cap_b
+        return self.n
+
+
+def _io_bytes(s: RetrieveShape) -> float:
+    return s.nq * s.d * F32 + s.nq * s.k * (F32 + I32)
+
+
+def _corpus_bytes(s: RetrieveShape) -> float:
+    """Payload bytes the search must stream from HBM (the bound term)."""
+    if s.index_type == "ivf":
+        r = s.rows_scored
+        probe = s.nlist * s.d * F32 + s.nq * s.nlist * F32  # centroid scan
+        if s.quant == "pq":
+            # packed int32 codes + per-query LUT build (write + read)
+            return s.nq * r * s.pq_m * I32 + 2 * s.nq * s.pq_m * 256 * F32 \
+                + probe
+        return s.nq * r * s.d * F32 + probe
+    if s.quant == "sq8":
+        return s.n * s.d * I8
+    return s.n * s.d * F32
+
+
+def hbm_bytes(s: RetrieveShape, fused: bool) -> Dict[str, float]:
+    """HBM bytes for one retrieve micro-batch: ``{total, bound, terms}``."""
+    bound = _corpus_bytes(s) + _io_bytes(s)
+    terms: Dict[str, float] = {"bound": bound}
+    r = s.rows_scored
+    if fused:
+        # per-tile candidate lists (scores f32 + ids i32), written by the
+        # kernel and re-read once by the merge
+        nt = s.nprobe if s.index_type == "ivf" else -(-s.n // s.bn)
+        terms["candidates"] = 2 * s.nq * nt * s.k * (F32 + I32)
+    else:
+        # score matrix written, then re-read by lax.top_k
+        terms["score_matrix"] = 2 * s.nq * r * F32
+        if s.index_type == "ivf":
+            if s.quant == "pq":
+                # gathered [nq,np,cap_b,m] codes + gathered LUT values,
+                # each written then re-read
+                terms["gather"] = 4 * s.nq * r * s.pq_m * I32 \
+                    + 2 * s.nq * r * s.pq_m * F32
+            else:
+                # gathered [nq,np,cap_b,d] candidate tensor (write + read)
+                terms["gather"] = 2 * s.nq * r * s.d * F32
+        elif s.quant == "sq8":
+            # reference int8->f32 corpus upcast materialized (write + read)
+            terms["upcast"] = 2 * s.n * s.d * F32
+    total = sum(terms.values())
+    return {"total": total, "bound": bound, "terms": terms}
+
+
+def roofline(s: RetrieveShape, hw: HW = HW()) -> Dict[str, object]:
+    """Fused-vs-unfused roofline record for one micro-batch shape.
+
+    ``*_bound_fraction`` is bound/total — 1.0 means the path moves only
+    the bytes the search fundamentally requires.
+    """
+    fused = hbm_bytes(s, fused=True)
+    unfused = hbm_bytes(s, fused=False)
+    flops = 2.0 * s.nq * s.rows_scored * (
+        s.pq_m if (s.index_type == "ivf" and s.quant == "pq") else s.d)
+    return {
+        "shape": s,
+        "flops": flops,
+        "compute_s": flops / hw.peak_flops,
+        "bound_bytes": fused["bound"],
+        "fused_bytes": fused["total"],
+        "unfused_bytes": unfused["total"],
+        "fused_memory_s": fused["total"] / hw.hbm_bw,
+        "unfused_memory_s": unfused["total"] / hw.hbm_bw,
+        "fused_bound_fraction": fused["bound"] / fused["total"],
+        "unfused_bound_fraction": unfused["bound"] / unfused["total"],
+        "fused_terms": fused["terms"],
+        "unfused_terms": unfused["terms"],
+    }

@@ -80,7 +80,12 @@ class ShardedDBConfig:
     use_hybrid: bool = True
     flat_capacity: int = 4096        # global freshness budget (split)
     rebuild_threshold: float = 0.75
-    use_kernel: bool = False
+    # kernel ladder rung, passed through to every shard's DBConfig:
+    # False/"off" | True/"op" | "fused".  The fused retrieve backend
+    # composes with the per-shard scan for free — each shard's
+    # ``_search_arrays`` dispatches its own fused probe over its own
+    # packed mirror, and the O(shards·k) merge is unchanged.
+    use_kernel: object = False
     train_sample: int = 16384
     balance_slack: float = 1.5       # per-shard headroom over an even split
     use_mesh: bool = True            # fused shard_map scan when mesh matches

@@ -92,3 +92,148 @@ def test_ops_dispatch_xla_mode(monkeypatch):
     s, i = ops.topk_search(q, vecs, live, 3)
     s2, i2 = ref.topk_search(q, vecs, live, 3)
     np.testing.assert_allclose(np.asarray(s), np.asarray(s2))
+
+
+# -- kernel-dispatch validation (the _mode() silent-fallback bugfix) --------
+
+
+def test_invalid_env_mode_raises_naming_allowed_values(monkeypatch):
+    """A typo'd REPRO_KERNEL_MODE used to silently select interpret (the
+    slowest path); it must now raise and name the allowed values."""
+    for bad in ("XLA", "Pallas", "interp", "tpu"):
+        monkeypatch.setenv("REPRO_KERNEL_MODE", bad)
+        with pytest.raises(ValueError) as exc:
+            ops.kernel_mode()
+        msg = str(exc.value)
+        assert bad in msg
+        for allowed in ops.KERNEL_MODES:
+            assert allowed in msg
+
+
+def test_invalid_explicit_mode_raises(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNEL_MODE", raising=False)
+    q = jnp.ones((1, 8), jnp.float32)
+    vecs = jnp.ones((8, 8), jnp.float32)
+    live = jnp.ones((8,), bool)
+    with pytest.raises(ValueError):
+        ops.topk_search(q, vecs, live, 2, mode="fast")
+
+
+def test_valid_env_modes_accepted(monkeypatch):
+    for good in ops.KERNEL_MODES:
+        monkeypatch.setenv("REPRO_KERNEL_MODE", good)
+        assert ops.kernel_mode() == good
+
+
+# -- topk_search_pallas edge-case contracts ---------------------------------
+# Every case must honor the documented (NEG, -1) padding: rows with fewer
+# than k live matches pad with sentinel pairs, and no valid id may repeat.
+
+
+def _assert_padding_contract(s, i, n_live_expected=None):
+    s, i = np.asarray(s), np.asarray(i)
+    neg = np.float32(-3.0e38)
+    for r in range(s.shape[0]):
+        valid = i[r][i[r] >= 0]
+        assert len(valid) == len(set(valid.tolist())), "duplicate ids"
+        # sentinel pairs: id -1 <-> score NEG, and all sentinels trail
+        dead = i[r] < 0
+        assert (s[r][dead] <= neg / 2).all()
+        assert (s[r][~dead] > neg / 2).all()
+        if n_live_expected is not None:
+            assert (~dead).sum() == min(n_live_expected, s.shape[1])
+
+
+def test_topk_k_larger_than_block():
+    """k > bn: extra selection rounds drain the tile; the merge must pad
+    with (NEG, -1), never emit the tile-base id at NEG score."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((3, 8)), jnp.float32)
+    vecs = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    live = jnp.ones((32,), bool)
+    s, i = topk_search_pallas(q, vecs, live, k=8, bq=8, bn=4, interpret=True)
+    _assert_padding_contract(s, i, n_live_expected=32)
+    s_ref, i_ref = ref.topk_search(q, vecs, live, 8)
+    assert (np.asarray(i) == np.asarray(i_ref)).all()
+
+
+def test_topk_k_exceeds_live_rows():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((2, 8)), jnp.float32)
+    vecs = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
+    live = np.zeros(64, bool)
+    live[[3, 17, 40]] = True                  # 3 live rows, k=6
+    s, i = topk_search_pallas(q, vecs, jnp.asarray(live), 6, interpret=True)
+    _assert_padding_contract(s, i, n_live_expected=3)
+    assert set(np.asarray(i)[0][np.asarray(i)[0] >= 0]) <= {3, 17, 40}
+
+
+def test_topk_n_smaller_than_k():
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((1, 8)), jnp.float32)
+    vecs = jnp.asarray(rng.standard_normal((5, 8)), jnp.float32)
+    live = jnp.ones((5,), bool)
+    s, i = topk_search_pallas(q, vecs, live, 8, interpret=True)
+    _assert_padding_contract(s, i, n_live_expected=5)
+
+
+def test_topk_all_dead_and_odd_shapes():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((1, 24)), jnp.float32)  # nq=1
+    vecs = jnp.asarray(rng.standard_normal((129, 24)), jnp.float32)
+    s, i = topk_search_pallas(q, vecs, jnp.zeros((129,), bool), 4,
+                              interpret=True)
+    assert (np.asarray(i) == -1).all()
+    assert (np.asarray(s) <= -1e38).all()
+
+
+# -- three-way equivalence: pallas-interpret vs ref-xla vs fused ------------
+# Non-tile-aligned shapes; runs under whatever REPRO_KERNEL_MODE tier-1
+# sets, plus explicit interpret/xla sweeps below.
+
+from repro.kernels import fused_retrieve as fr  # noqa: E402
+
+
+@pytest.mark.parametrize("nq,N,d,k", [
+    (1, 33, 12, 1),           # nq=1, k=1, nothing tile-aligned
+    (5, 130, 20, 7),
+    (3, 1025, 24, 5),         # N just past one bn tile
+])
+@pytest.mark.parametrize("env_mode", ["interpret", "xla"])
+def test_three_way_flat_equivalence(nq, N, d, k, env_mode, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", env_mode)
+    rng = np.random.default_rng(nq * 7 + N)
+    q = jnp.asarray(rng.standard_normal((nq, d)), jnp.float32)
+    vecs = jnp.asarray(rng.standard_normal((N, d)), jnp.float32)
+    live = jnp.asarray(rng.random(N) > 0.15)
+    s_pal, i_pal = topk_search_pallas(q, vecs, live, k, interpret=True)
+    s_ref, i_ref = ref.topk_search(q, vecs, live, k)
+    s_fus, i_fus = ops.fused_flat_topk(q, vecs, live, k)
+    assert (np.asarray(i_pal) == np.asarray(i_ref)).all()
+    assert (np.asarray(i_fus) == np.asarray(i_ref)).all()
+    np.testing.assert_allclose(np.asarray(s_pal), np.asarray(s_ref),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_fus), np.asarray(s_ref),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("nq,N,d,k", [(2, 77, 16, 3), (4, 1030, 32, 9)])
+@pytest.mark.parametrize("env_mode", ["interpret", "xla"])
+def test_three_way_sq8_equivalence(nq, N, d, k, env_mode, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_MODE", env_mode)
+    rng = np.random.default_rng(nq * 13 + N)
+    q = jnp.asarray(rng.standard_normal((nq, d)), jnp.float32)
+    codes = jnp.asarray(rng.integers(-127, 128, (N, d)).astype(np.int8))
+    scale = jnp.asarray((rng.random(d).astype(np.float32) + 0.5) / 127)
+    live = jnp.asarray(rng.random(N) > 0.1)
+    # dense reference: full quant score + masked top-k with -1 sentinel
+    full = jnp.where(live[None, :], ref.quant_score(q, codes, scale), fr.NEG)
+    s_ref, i_ref = jax.lax.top_k(full, k)
+    i_ref = jnp.where(s_ref <= fr.NEG / 2, -1, i_ref)
+    s_pal, i_pal = fr.sq8_topk_pallas(q, codes, scale, live, k,
+                                      interpret=True)
+    s_fus, i_fus = ops.fused_sq8_topk(q, codes, scale, live, k)
+    assert (np.asarray(i_pal) == np.asarray(i_ref)).all()
+    assert (np.asarray(i_fus) == np.asarray(i_ref)).all()
+    np.testing.assert_allclose(np.asarray(s_fus), np.asarray(s_ref),
+                               rtol=1e-5)
